@@ -1,0 +1,34 @@
+"""Figure 16: performance breakdown — no sharing / JS-OJ / JS-MV / hybrid
+on the combined model (recommendation(catalog) + fraud(store))."""
+from __future__ import annotations
+
+from benchmarks.common import SFS, Row, emit, timed_extract
+from repro.core import extract_graph, optimize, plan_cost
+from repro.data import combined_model, make_tpcds
+
+CONFIGS = [("none", "ringo"), ("js-oj", "extgraph-oj"),
+           ("js-mv", "extgraph-mv"), ("hybrid", "extgraph")]
+
+
+def run() -> list:
+    rows: list[Row] = []
+    sf = max(SFS)
+    db = make_tpcds(sf=sf, seed=0)
+    model = combined_model()
+    base = None
+    for label, method in CONFIGS:
+        t = timed_extract(db, model, method)
+        if base is None:
+            base = t.total_s
+        rows.append((f"fig16/breakdown_sf{sf}_{label}", t.total_s * 1e6,
+                     f"speedup_vs_none={base / t.total_s:.2f}"))
+    # also report the hybrid plan the optimizer chose (Fig 16(b) analogue)
+    plan = optimize(db, model.queries())
+    cost = plan_cost(db, plan)
+    desc = plan.describe().replace("\n", " | ").replace(",", ";")
+    rows.append((f"fig16/hybrid_plan_sf{sf}", cost, desc))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

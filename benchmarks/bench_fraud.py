@@ -1,0 +1,32 @@
+"""Figure 15: fraud-detection-scenario extraction time (paper: up to 2.78x).
+"""
+from __future__ import annotations
+
+from benchmarks.common import SFS, Row, emit, timed_extract
+from repro.core import extract_graph
+from repro.data import fraud_model, make_tpcds
+
+METHODS = ["ringo", "graphgen", "r2gsync", "extgraph"]
+
+
+def run() -> list:
+    rows: list[Row] = []
+    for sf in SFS:
+        db = make_tpcds(sf=sf, seed=0)
+        for ch in ("store", "catalog", "web"):
+            model = fraud_model(ch)
+            base = None
+            for method in METHODS:
+                t = timed_extract(db, model, method)
+                if method == "ringo":
+                    base = t.total_s
+                speed = f"speedup_vs_ringo={base / t.total_s:.2f}"
+                if t.convert_s:
+                    speed += f";convert_s={t.convert_s:.2f}"
+                rows.append((f"fig15/fraud_{ch}_sf{sf}_{method}",
+                             t.total_s * 1e6, speed))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,33 @@
+"""Figure 6(c): JS-MV micro — Co-pur+Same-pro with/without the C|><|SS view."""
+from __future__ import annotations
+
+from benchmarks.common import SFS, Row, emit, time_call
+from repro.core import GraphModel, extract_graph
+from repro.data import make_tpcds
+from repro.data.tpcds import copur_query, samepro_query, _VERTS
+from repro.core.model import EdgeDef
+
+
+def run() -> list:
+    rows: list[Row] = []
+    sf = max(SFS)
+    db = make_tpcds(sf=sf, seed=0)
+    model = GraphModel(
+        name="jsmv_micro",
+        vertices=_VERTS,
+        edges=(
+            EdgeDef("Co-pur", "Customer", "Customer", copur_query("store")),
+            EdgeDef("Same-pro", "Customer", "Customer",
+                    samepro_query("store")),
+        ),
+    )
+    t_base = time_call(lambda: extract_graph(db, model, method="ringo"))
+    t_mv = time_call(lambda: extract_graph(db, model, method="extgraph-mv"))
+    rows.append((f"fig6c/copur_samepro_separate_sf{sf}", t_base, ""))
+    rows.append((f"fig6c/copur_samepro_jsmv_sf{sf}", t_mv,
+                 f"speedup={t_base / t_mv:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,56 @@
+"""Kernel micro-benchmarks (interpret-mode on CPU; structural on TPU).
+
+Times the jnp reference vs the Pallas interpret path.  On CPU the interpret
+path is NOT indicative of TPU speed — the derived column reports elements/s
+of the reference oracle, which is the portable number.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, emit, time_call
+from repro.kernels import ref
+
+
+def run() -> list:
+    rows: list[Row] = []
+    rng = np.random.default_rng(0)
+    n_sorted, n_probe = 1 << 16, 1 << 16
+    sk = jnp.asarray(np.sort(rng.integers(0, 1 << 20, n_sorted))
+                     .astype(np.int32))
+    pk = jnp.asarray(rng.integers(0, 1 << 20, n_probe).astype(np.int32))
+
+    probe = jax.jit(ref.sorted_probe)
+    jax.block_until_ready(probe(sk, pk))
+    us = time_call(lambda: jax.block_until_ready(probe(sk, pk)), repeats=3)
+    rows.append(("kernels/sorted_probe_ref_64k", us,
+                 f"probes_per_s={n_probe / (us / 1e6):.3g}"))
+
+    vals = jnp.asarray(rng.integers(0, 4096, 1 << 16).astype(np.int32))
+    valid = jnp.ones((1 << 16,), bool)
+    seg = jax.jit(lambda v, m: ref.segment_counts(v, m, 4096))
+    jax.block_until_ready(seg(vals, valid))
+    us = time_call(lambda: jax.block_until_ready(seg(vals, valid)), repeats=3)
+    rows.append(("kernels/segment_counts_ref_64k", us,
+                 f"elems_per_s={(1 << 16) / (us / 1e6):.3g}"))
+
+    keys = jnp.asarray(rng.integers(0, 1 << 20, 1 << 14).astype(np.int32))
+    bb = jax.jit(lambda k: ref.bloom_build(k, jnp.ones(k.shape, bool),
+                                           1 << 16))
+    bits = jax.block_until_ready(bb(keys))
+    us = time_call(lambda: jax.block_until_ready(bb(keys)), repeats=3)
+    rows.append(("kernels/bloom_build_ref_16k", us,
+                 f"keys_per_s={(1 << 14) / (us / 1e6):.3g}"))
+    bp = jax.jit(lambda b, k: ref.bloom_probe(b, k))
+    jax.block_until_ready(bp(bits, keys))
+    us = time_call(lambda: jax.block_until_ready(bp(bits, keys)), repeats=3)
+    rows.append(("kernels/bloom_probe_ref_16k", us,
+                 f"keys_per_s={(1 << 14) / (us / 1e6):.3g}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

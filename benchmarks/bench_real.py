@@ -1,0 +1,32 @@
+"""Table 3: real-dataset (DBLP / IMDB) extraction time per method."""
+from __future__ import annotations
+
+from benchmarks.common import Row, emit, timed_extract
+from repro.core import extract_graph
+from repro.data import dblp_model, imdb_model, make_dblp, make_imdb
+
+METHODS = ["ringo", "graphgen", "r2gsync", "extgraph"]
+
+
+def run() -> list:
+    rows: list[Row] = []
+    for name, make, model_fn in (
+        ("dblp", make_dblp, dblp_model),
+        ("imdb", make_imdb, imdb_model),
+    ):
+        db = make(scale=1)
+        model = model_fn()
+        base = None
+        for method in METHODS:
+            t = timed_extract(db, model, method)
+            if method == "ringo":
+                base = t.total_s
+            derived = f"speedup_vs_ringo={base / t.total_s:.2f}"
+            if t.convert_s:
+                derived += f";convert_s={t.convert_s:.2f}"
+            rows.append((f"table3/{name}_{method}", t.total_s * 1e6, derived))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

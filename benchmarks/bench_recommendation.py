@@ -1,0 +1,35 @@
+"""Figure 14: recommendation-scenario extraction time, per method/channel/SF.
+
+Derived column reports speedup of ExtGraph over Ringo (the paper's headline:
+up to 2.34x) and the GraphGen/R2GSync conversion share.
+"""
+from __future__ import annotations
+
+from benchmarks.common import SFS, Row, emit, timed_extract
+from repro.core import extract_graph
+from repro.data import make_tpcds, recommendation_model
+
+METHODS = ["ringo", "graphgen", "r2gsync", "extgraph"]
+
+
+def run() -> list:
+    rows: list[Row] = []
+    for sf in SFS:
+        db = make_tpcds(sf=sf, seed=0)
+        for ch in ("store", "catalog", "web"):
+            model = recommendation_model(ch)
+            base = None
+            for method in METHODS:
+                t = timed_extract(db, model, method)
+                if method == "ringo":
+                    base = t.total_s
+                speed = f"speedup_vs_ringo={base / t.total_s:.2f}"
+                if t.convert_s:
+                    speed += f";convert_s={t.convert_s:.2f}"
+                rows.append((f"fig14/rec_{ch}_sf{sf}_{method}",
+                             t.total_s * 1e6, speed))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

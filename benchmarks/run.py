@@ -1,0 +1,41 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_breakdown,
+        bench_fraud,
+        bench_jsmv_micro,
+        bench_jsoj_micro,
+        bench_kernels,
+        bench_real,
+        bench_recommendation,
+    )
+    from benchmarks.common import emit
+
+    modules = [
+        ("fig5c_jsoj_micro", bench_jsoj_micro),
+        ("fig6c_jsmv_micro", bench_jsmv_micro),
+        ("fig14_recommendation", bench_recommendation),
+        ("fig15_fraud", bench_fraud),
+        ("table3_real", bench_real),
+        ("fig16_breakdown", bench_breakdown),
+        ("kernels", bench_kernels),
+    ]
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, mod in modules:
+        try:
+            emit(mod.run())
+        except Exception:
+            failed += 1
+            print(f"{name},nan,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"{failed} benchmark modules failed")
+
+
+if __name__ == '__main__':
+    main()

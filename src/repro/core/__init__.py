@@ -1,0 +1,35 @@
+# ExtGraph's primary contribution: join-sharing graph extraction
+# (JS-OJ + JS-MV + cost-based hybrid planning), Sections 3-5 of the paper.
+from repro.core.model import (
+    ColumnRef,
+    EdgeDef,
+    GraphModel,
+    JoinCond,
+    JoinQuery,
+    Predicate,
+    Relation,
+    VertexDef,
+)
+from repro.core.database import Database, TableStats
+from repro.core.extract import ExtractedGraph, Timings, extract_graph
+from repro.core.planner import ExtractionPlan, PlanUnit, optimize, plan_cost
+
+__all__ = [
+    "ColumnRef",
+    "EdgeDef",
+    "GraphModel",
+    "JoinCond",
+    "JoinQuery",
+    "Predicate",
+    "Relation",
+    "VertexDef",
+    "Database",
+    "TableStats",
+    "ExtractedGraph",
+    "Timings",
+    "extract_graph",
+    "ExtractionPlan",
+    "PlanUnit",
+    "optimize",
+    "plan_cost",
+]

@@ -1,0 +1,63 @@
+"""Database instance D = {R_i}: named columnar tables + ANALYZE statistics."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.relational import Table, count_distinct
+
+
+@dataclasses.dataclass
+class TableStats:
+    """Optimizer statistics (PostgreSQL-ANALYZE analogue)."""
+
+    rows: int
+    distinct: Dict[str, int]
+    width: int  # columns (4 bytes each, all int32/float32)
+
+    def bytes(self) -> int:
+        return self.rows * self.width * 4
+
+    def ndv(self, col: str) -> int:
+        return max(1, self.distinct.get(col, self.rows))
+
+
+class Database:
+    """Named tables + stats; views are added at plan-execution time."""
+
+    def __init__(self, tables: Optional[Dict[str, Table]] = None):
+        self.tables: Dict[str, Table] = dict(tables or {})
+        self.stats: Dict[str, TableStats] = {}
+        for name in self.tables:
+            self.analyze(name)
+
+    def add_table(self, name: str, table: Table, analyze: bool = True):
+        self.tables[name] = table
+        if analyze:
+            self.analyze(name)
+
+    def add_view(self, name: str, table: Table, stats: TableStats):
+        """Views carry estimated stats (no ANALYZE pass: that's the point)."""
+        self.tables[name] = table
+        self.stats[name] = stats
+
+    def table(self, name: str) -> Table:
+        return self.tables[name]
+
+    def analyze(self, name: str) -> TableStats:
+        t = self.tables[name]
+        rows = int(t.num_rows())
+        distinct = {}
+        for col in t.column_names():
+            arr = np.asarray(t[col])
+            if arr.dtype.kind in "iu":
+                distinct[col] = count_distinct(t, col)
+        st = TableStats(rows=rows, distinct=distinct,
+                        width=len(t.column_names()))
+        self.stats[name] = st
+        return st
+
+    def total_bytes(self) -> int:
+        return sum(s.bytes() for s in self.stats.values())

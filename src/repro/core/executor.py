@@ -1,0 +1,153 @@
+"""Plan execution against a Database — eager two-phase (count, expand) path.
+
+Every join is the static-shape sort-merge primitive from
+:mod:`repro.relational`.  Execution order per query comes from the cost
+model's best left-deep order, mirroring the paper's assumption that the base
+system picks the join order.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.cost import estimate_query
+from repro.core.database import Database
+from repro.core.jsoj import MergedQuery
+from repro.core.model import ColumnRef, JoinCond, JoinQuery, Relation
+from repro.relational import (
+    Table,
+    dedup,
+    filter_table,
+    left_outer_join,
+    sort_merge_join,
+)
+
+
+def scan_relation(db: Database, rel: Relation) -> Table:
+    """Load + filter + alias-prefix one base table (or view)."""
+    t = db.table(rel.table)
+    for f in rel.filters:
+        t = filter_table(t, f.col, f.op, f.value)
+    return t.prefix(rel.alias)
+
+
+def execute_query(
+    db: Database,
+    query: JoinQuery,
+    order: Optional[Sequence[str]] = None,
+) -> Table:
+    """Inner-join a query's relations in cost-model order."""
+    if order is None:
+        order = estimate_query(db, query).order
+    cur = scan_relation(db, query.relation(order[0]))
+    joined = {order[0]}
+    remaining = list(query.conds)
+    for alias in order[1:]:
+        conds = [c for c in remaining if
+                 (c.left == alias and c.right in joined)
+                 or (c.right == alias and c.left in joined)]
+        if not conds:
+            raise ValueError(f"join order {order} disconnected at {alias}")
+        for c in conds:
+            remaining.remove(c)
+        nxt = scan_relation(db, query.relation(alias))
+        on = []
+        for c in conds:
+            cc = c.oriented_from(c.left if c.left != alias else c.right)
+            # cc.left is on the already-joined side, cc.right on the new table
+            on.append((f"{cc.left}.{cc.lcol}", f"{cc.right}.{cc.rcol}"))
+        cur = sort_merge_join(cur, nxt, on=on)
+        joined.add(alias)
+        # cycle-closing conditions now fully contained in the joined set
+        closing = [c for c in list(remaining)
+                   if c.left in joined and c.right in joined]
+        for c in closing:
+            remaining.remove(c)
+            cur = cur.mask(cur[f"{c.left}.{c.lcol}"]
+                           == cur[f"{c.right}.{c.rcol}"])
+    assert not remaining, f"unapplied conditions: {remaining}"
+    return cur
+
+
+def edge_output(table: Table, src: ColumnRef, dst: ColumnRef,
+                keep=None) -> Table:
+    """Project a query result down to an (src, dst) edge table."""
+    valid = table.valid if keep is None else (table.valid & keep)
+    return Table(
+        columns={"src": table[src.qualified()].astype(jnp.int32),
+                 "dst": table[dst.qualified()].astype(jnp.int32)},
+        valid=valid,
+    )
+
+
+def execute_merged(db: Database, merged: MergedQuery) -> Dict[str, Table]:
+    """Execute a JS-OJ merged query; returns {edge label: edge table}.
+
+    Theorem 4.3 recovers each member's result from G_M* by keeping rows where
+    all of that member's branch indicators are true.  Because the merged
+    table is the *cross product per S-row* of every member's branch matches,
+    a member's rows are replicated by the other members' expansions; exact
+    bag semantics are restored by deduplicating on (S row id, this member's
+    branch match row ids) — those keys identify one original join result row.
+    """
+    s_query = JoinQuery(
+        name="__S__",
+        relations=merged.pattern.relations,
+        conds=merged.pattern.conds,
+        src=ColumnRef(merged.pattern.relations[0].alias, "__any__"),
+        dst=ColumnRef(merged.pattern.relations[0].alias, "__any__"),
+    )
+    cur = execute_query(db, s_query)
+    cur = cur.with_columns(
+        __srow__=jnp.arange(cur.capacity, dtype=jnp.int32))
+    indicators: Dict[str, str] = {}
+    rowid_cols: Dict[str, str] = {}
+    for b in merged.branches:
+        ind = f"__m__{b.id}"
+        indicators[b.id] = ind
+        if not b.relations:
+            # pure-predicate branch (cyclic closure on S): indicator only
+            mask = jnp.ones((cur.capacity,), dtype=bool)
+            for c in b.link_conds:
+                mask = mask & (cur[f"{c.left}.{c.lcol}"]
+                               == cur[f"{c.right}.{c.rcol}"])
+            cur = cur.with_columns(**{ind: mask})
+            continue
+        branch_tbl = execute_query(db, b.as_query()) if len(b.relations) > 1 \
+            else scan_relation(db, b.relations[0])
+        brow = f"__brow__{b.id}"
+        rowid_cols[b.id] = brow
+        branch_tbl = branch_tbl.with_columns(
+            **{brow: jnp.arange(branch_tbl.capacity, dtype=jnp.int32)})
+        on = [(f"{c.left}.{c.lcol}", f"{c.right}.{c.rcol}")
+              for c in b.link_conds]
+        cur = left_outer_join(cur, branch_tbl, on=on, indicator=ind)
+
+    out: Dict[str, Table] = {}
+    for m in merged.members:
+        keep = jnp.ones((cur.capacity,), dtype=bool)
+        for bid in m.branch_ids:
+            keep = keep & cur[indicators[bid]]
+        for c in m.residual_conds:
+            keep = keep & (cur[f"{c.left}.{c.lcol}"]
+                           == cur[f"{c.right}.{c.rcol}"])
+        member_rows = cur.mask(keep)
+        dedup_keys = ["__srow__"] + [
+            rowid_cols[bid] for bid in m.branch_ids if bid in rowid_cols
+        ]
+        member_rows = dedup(member_rows, dedup_keys)
+        out[m.name] = edge_output(member_rows, m.src, m.dst)
+    return out
+
+
+def materialize_view(db: Database, name: str, query: JoinQuery,
+                     stats) -> Table:
+    """Execute a view query and register the result under ``name``.
+
+    Column names in the stored view stay pattern-alias-qualified
+    ("p0.c_id"), matching the rewrite in :mod:`repro.core.jsmv`.
+    """
+    result = execute_query(db, query)
+    db.add_view(name, result, stats)
+    return result

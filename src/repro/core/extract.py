@@ -1,0 +1,156 @@
+"""Top-level graph extraction (Definitions 2.2 / 3.1).
+
+``extract_graph(db, model, method=...)`` runs one of:
+
+* ``extgraph`` — Alg 2 hybrid plan (JS-OJ + JS-MV), the paper's method
+* ``extgraph-oj`` / ``extgraph-mv`` — ablations (Fig 16's middle bars)
+* ``ringo`` / ``graphgen`` / ``r2gsync`` — baselines (see baselines.py)
+
+All methods return the same user-intended graph: {vertex label: Table},
+{edge label: Table(src, dst)}; timings split extraction vs conversion the
+way the paper reports them (conversion != 0 only for GraphGen/R2GSync).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+
+from repro.core import baselines
+from repro.core.database import Database
+from repro.core.executor import (
+    edge_output,
+    execute_merged,
+    execute_query,
+    materialize_view,
+)
+from repro.core.model import GraphModel
+from repro.core.cost import estimate_query, view_stats_from_estimate
+from repro.core.planner import ExtractionPlan, optimize
+from repro.relational import Table
+
+
+@dataclasses.dataclass
+class ExtractedGraph:
+    vertices: Dict[str, Table]
+    edges: Dict[str, Table]
+
+    def block_until_ready(self):
+        for t in list(self.vertices.values()) + list(self.edges.values()):
+            jax.block_until_ready(t.valid)
+        return self
+
+
+@dataclasses.dataclass
+class Timings:
+    plan_s: float = 0.0
+    extract_s: float = 0.0
+    convert_s: float = 0.0
+
+    @property
+    def total_s(self) -> float:
+        return self.plan_s + self.extract_s + self.convert_s
+
+
+def extract_vertices(db: Database, model: GraphModel) -> Dict[str, Table]:
+    out = {}
+    for v in model.vertices:
+        t = db.table(v.table)
+        cols = {"id": t[v.id_col]}
+        for p in v.props:
+            cols[p] = t[p]
+        out[v.label] = Table(columns=cols, valid=t.valid)
+    return out
+
+
+def execute_plan(db: Database, plan: ExtractionPlan) -> Dict[str, Table]:
+    """Materialize views in order, then run every unit."""
+    edges: Dict[str, Table] = {}
+    for v in plan.views:
+        est = estimate_query(db, v.as_query())
+        materialize_view(db, v.name, v.as_query(),
+                         view_stats_from_estimate(est))
+    for u in plan.units:
+        if u.is_single:
+            res = execute_query(db, u.single)
+            edges[u.single.name] = edge_output(res, u.single.src, u.single.dst)
+        else:
+            edges.update(execute_merged(db, u.group))
+    return edges
+
+
+def _ablation_plan(db: Database, queries, oj_only: bool) -> ExtractionPlan:
+    """Greedy Alg 2 restricted to one move type (Fig 16's JS-OJ / JS-MV bars)."""
+    from repro.core.planner import (
+        PlanUnit, _mv_candidates, _oj_candidates, plan_cost)
+    plan = ExtractionPlan(
+        views=(), units=tuple(PlanUnit(single=q) for q in queries))
+    best = plan_cost(db, plan)
+    while True:
+        cands = _oj_candidates(plan) if oj_only else _mv_candidates(plan)
+        scored = []
+        for c in cands:
+            try:
+                scored.append((plan_cost(db, c), c))
+            except (ValueError, AssertionError, KeyError):
+                continue
+        if not scored:
+            break
+        scored.sort(key=lambda t: t[0])
+        if scored[0][0] < best:
+            best, plan = scored[0][0], scored[0][1]
+        else:
+            break
+    return plan
+
+
+def extract_graph(
+    db: Database,
+    model: GraphModel,
+    method: str = "extgraph",
+    verbose: bool = False,
+) -> Tuple[ExtractedGraph, Timings]:
+    """Definition 3.1's four steps, timed."""
+    timings = Timings()
+    queries = model.queries()
+
+    t0 = time.perf_counter()
+    if method == "extgraph":
+        plan = optimize(db, queries, verbose=verbose)
+    elif method in ("extgraph-oj", "extgraph-mv"):
+        plan = _ablation_plan(db, queries, oj_only=(method == "extgraph-oj"))
+    elif method in ("ringo", "graphgen", "r2gsync"):
+        plan = None
+    else:
+        raise ValueError(f"unknown method {method!r}")
+    timings.plan_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    if plan is not None:
+        shadow = Database()
+        shadow.tables = dict(db.tables)
+        shadow.stats = dict(db.stats)
+        edges = execute_plan(shadow, plan)
+        for label in edges:
+            jax.block_until_ready(edges[label].valid)
+        timings.extract_s = time.perf_counter() - t0
+    elif method == "ringo":
+        edges = {}
+        for q in queries:
+            res = execute_query(db, q)
+            edges[q.name] = edge_output(res, q.src, q.dst)
+            jax.block_until_ready(edges[q.name].valid)
+        timings.extract_s = time.perf_counter() - t0
+    elif method == "graphgen":
+        edges, ext_s, conv_s = baselines.run_graphgen(db, queries)
+        timings.extract_s, timings.convert_s = ext_s, conv_s
+    else:  # r2gsync
+        edges, ext_s, conv_s = baselines.run_r2gsync(db, queries)
+        timings.extract_s, timings.convert_s = ext_s, conv_s
+
+    vertices = extract_vertices(db, model)
+    graph = ExtractedGraph(vertices=vertices, edges=edges)
+    graph.block_until_ready()
+    return graph, timings

@@ -1,0 +1,232 @@
+"""Graph-model IR: Definitions 2.1 (graph model) and 4.1 (join graph).
+
+A :class:`JoinQuery` is the paper's join graph G = (V, E, f, g): aliases are
+vertices, equality conditions are (multi-)edges, ``kind`` is f(e) and the
+column pair is g(e).  Only equijoins are supported (all workloads in the
+paper are equijoins); arbitrary predicates are expressed as per-relation
+filters.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, FrozenSet, List, Mapping, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Predicate:
+    """sigma_{col op value} applied to one relation (pushed to the scan)."""
+
+    col: str
+    op: str
+    value: float
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Relation:
+    """One vertex of the join graph: an aliased base table (or view)."""
+
+    alias: str
+    table: str
+    filters: Tuple[Predicate, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class JoinCond:
+    """One edge of the join graph: ``left.lcol == right.rcol``."""
+
+    left: str
+    lcol: str
+    right: str
+    rcol: str
+
+    def endpoints(self) -> FrozenSet[str]:
+        return frozenset((self.left, self.right))
+
+    def flipped(self) -> "JoinCond":
+        return JoinCond(self.right, self.rcol, self.left, self.lcol)
+
+    def touches(self, alias: str) -> bool:
+        return self.left == alias or self.right == alias
+
+    def oriented_from(self, alias: str) -> "JoinCond":
+        """Return the condition with ``alias`` on the left."""
+        if self.left == alias:
+            return self
+        if self.right == alias:
+            return self.flipped()
+        raise ValueError(f"{alias} not an endpoint of {self}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ColumnRef:
+    alias: str
+    col: str
+
+    def qualified(self) -> str:
+        return f"{self.alias}.{self.col}"
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinQuery:
+    """Join graph of one edge definition (Def 4.1) plus output refs."""
+
+    name: str
+    relations: Tuple[Relation, ...]
+    conds: Tuple[JoinCond, ...]
+    src: ColumnRef
+    dst: ColumnRef
+
+    def __post_init__(self):
+        aliases = [r.alias for r in self.relations]
+        if len(set(aliases)) != len(aliases):
+            raise ValueError(f"duplicate aliases in {self.name}: {aliases}")
+        known = set(aliases)
+        for c in self.conds:
+            if c.left not in known or c.right not in known:
+                raise ValueError(f"cond {c} references unknown alias")
+        for ref in (self.src, self.dst):
+            if ref.alias not in known:
+                raise ValueError(f"output ref {ref} references unknown alias")
+
+    # -- graph views ---------------------------------------------------------
+    def relation(self, alias: str) -> Relation:
+        for r in self.relations:
+            if r.alias == alias:
+                return r
+        raise KeyError(alias)
+
+    def aliases(self) -> Tuple[str, ...]:
+        return tuple(r.alias for r in self.relations)
+
+    def adjacency(self) -> Dict[str, List[JoinCond]]:
+        adj: Dict[str, List[JoinCond]] = {r.alias: [] for r in self.relations}
+        for c in self.conds:
+            adj[c.left].append(c)
+            adj[c.right].append(c)
+        return adj
+
+    def connected_components(
+        self, aliases: Sequence[str]
+    ) -> List[FrozenSet[str]]:
+        """Components of the join graph restricted to ``aliases``."""
+        alias_set = set(aliases)
+        adj = {a: set() for a in alias_set}
+        for c in self.conds:
+            if c.left in alias_set and c.right in alias_set:
+                adj[c.left].add(c.right)
+                adj[c.right].add(c.left)
+        seen, comps = set(), []
+        for a in sorted(alias_set):
+            if a in seen:
+                continue
+            stack, comp = [a], set()
+            while stack:
+                x = stack.pop()
+                if x in comp:
+                    continue
+                comp.add(x)
+                stack.extend(adj[x] - comp)
+            seen |= comp
+            comps.append(frozenset(comp))
+        return comps
+
+    def is_chain(self) -> bool:
+        """True if the join graph is a simple path (GraphGen/R2GSync scope)."""
+        if len(self.conds) != len(self.relations) - 1:
+            return False
+        deg = {r.alias: 0 for r in self.relations}
+        for c in self.conds:
+            deg[c.left] += 1
+            deg[c.right] += 1
+        ends = sum(1 for d in deg.values() if d == 1)
+        mids = sum(1 for d in deg.values() if d == 2)
+        return ends == 2 and ends + mids == len(self.relations)
+
+    def chain_order(self) -> List[str]:
+        """Aliases in path order (requires :meth:`is_chain`)."""
+        adj = {r.alias: [] for r in self.relations}
+        for c in self.conds:
+            adj[c.left].append(c.right)
+            adj[c.right].append(c.left)
+        start = next(a for a, ns in adj.items() if len(ns) == 1)
+        order, prev = [start], None
+        while len(order) < len(self.relations):
+            nxt = [n for n in adj[order[-1]] if n != prev]
+            prev = order[-1]
+            order.append(nxt[0])
+        return order
+
+
+@dataclasses.dataclass(frozen=True)
+class VertexDef:
+    """(l_v, R_v) of Def 2.1 plus the id column and properties extracted."""
+
+    label: str
+    table: str
+    id_col: str
+    props: Tuple[str, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeDef:
+    """(l_e, m_src, m_dst, Q) of Def 2.1."""
+
+    label: str
+    src_label: str
+    dst_label: str
+    query: JoinQuery
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphModel:
+    """M = (M_v, M_e) of Def 2.1."""
+
+    name: str
+    vertices: Tuple[VertexDef, ...]
+    edges: Tuple[EdgeDef, ...]
+
+    def edge(self, label: str) -> EdgeDef:
+        for e in self.edges:
+            if e.label == label:
+                return e
+        raise KeyError(label)
+
+    def queries(self) -> List[JoinQuery]:
+        return [e.query for e in self.edges]
+
+
+# ---------------------------------------------------------------------------
+# Pattern canonicalization (for shared-subgraph dedup and JS-MV view naming)
+# ---------------------------------------------------------------------------
+
+Signature = Tuple  # nested tuples, hashable
+
+
+def pattern_signature(
+    relations: Sequence[Relation], conds: Sequence[JoinCond]
+) -> Signature:
+    """Canonical, alias-independent signature of a connected join subgraph.
+
+    Brute force over alias orderings grouped by table name (join graphs are
+    tiny, per the paper's own exhaustive-search argument in Alg 1).
+    """
+    rels = sorted(relations)
+    best: Optional[Signature] = None
+    aliases = [r.alias for r in rels]
+    for perm in itertools.permutations(range(len(rels))):
+        # only consider permutations that keep table names sorted
+        tables = [(rels[perm[i]].table, rels[perm[i]].filters) for i in range(len(rels))]
+        if tables != sorted(tables):
+            continue
+        remap = {rels[perm[i]].alias: f"p{i}" for i in range(len(rels))}
+        sig_conds = []
+        for c in conds:
+            a = (remap[c.left], c.lcol)
+            b = (remap[c.right], c.rcol)
+            sig_conds.append(tuple(sorted((a, b))))
+        sig = (tuple(tables), tuple(sorted(sig_conds)))
+        if best is None or sig < best:
+            best = sig
+    assert best is not None
+    return best

@@ -1,0 +1,107 @@
+"""Synthetic DBLP-shaped dataset + the Figure 12 graph model.
+
+Schema: author(rid, a_id), paper(rid, p_id, v_sk), venue(rid, v_id),
+editor(rid, e_id), wrote(rid, a_sk, p_sk), edits(rid, e_sk, v_sk).
+
+Edges: Co-auth  = A1 |><| W1 |><| P |><| W2 |><| A2      (chain, palindromic)
+       Auth-Edit = A |><| W |><| P |><| V |><| ED |><| E  (chain)
+Shared structure: A |><| W |><| P appears three times across the two queries
+— the JS-MV sweet spot the paper reports for DBLP.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.database import Database
+from repro.core.model import (
+    ColumnRef, EdgeDef, GraphModel, JoinCond, JoinQuery, Relation, VertexDef,
+)
+from repro.relational import Table
+
+
+def make_dblp(scale: int = 1, seed: int = 1) -> Database:
+    rng = np.random.default_rng(seed)
+    n_auth = 4000 * scale
+    n_paper = 6000 * scale
+    n_venue = max(32, 40 * scale)
+    n_editor = max(32, 200 * scale)
+    n_wrote = 18000 * scale          # ~3 authors/paper
+    n_edits = max(64, 400 * scale)   # editors per venue
+
+    db = Database()
+    db.add_table("author", Table.from_arrays(
+        rid=np.arange(n_auth, dtype=np.int32),
+        a_id=np.arange(n_auth, dtype=np.int32),
+        a_prop=rng.integers(0, 100, n_auth).astype(np.int32)))
+    db.add_table("paper", Table.from_arrays(
+        rid=np.arange(n_paper, dtype=np.int32),
+        p_id=np.arange(n_paper, dtype=np.int32),
+        v_sk=rng.integers(0, n_venue, n_paper).astype(np.int32)))
+    db.add_table("venue", Table.from_arrays(
+        rid=np.arange(n_venue, dtype=np.int32),
+        v_id=np.arange(n_venue, dtype=np.int32)))
+    db.add_table("editor", Table.from_arrays(
+        rid=np.arange(n_editor, dtype=np.int32),
+        e_id=np.arange(n_editor, dtype=np.int32)))
+    db.add_table("wrote", Table.from_arrays(
+        rid=np.arange(n_wrote, dtype=np.int32),
+        a_sk=rng.integers(0, n_auth, n_wrote).astype(np.int32),
+        p_sk=rng.integers(0, n_paper, n_wrote).astype(np.int32)))
+    db.add_table("edits", Table.from_arrays(
+        rid=np.arange(n_edits, dtype=np.int32),
+        e_sk=rng.integers(0, n_editor, n_edits).astype(np.int32),
+        v_sk=rng.integers(0, n_venue, n_edits).astype(np.int32)))
+    return db
+
+
+def coauth_query() -> JoinQuery:
+    return JoinQuery(
+        name="Co-auth",
+        relations=(
+            Relation("A1", "author"), Relation("W1", "wrote"),
+            Relation("P", "paper"), Relation("W2", "wrote"),
+            Relation("A2", "author"),
+        ),
+        conds=(
+            JoinCond("A1", "a_id", "W1", "a_sk"),
+            JoinCond("W1", "p_sk", "P", "p_id"),
+            JoinCond("P", "p_id", "W2", "p_sk"),
+            JoinCond("W2", "a_sk", "A2", "a_id"),
+        ),
+        src=ColumnRef("A1", "a_id"),
+        dst=ColumnRef("A2", "a_id"),
+    )
+
+
+def authedit_query() -> JoinQuery:
+    return JoinQuery(
+        name="Auth-Edit",
+        relations=(
+            Relation("A", "author"), Relation("W", "wrote"),
+            Relation("P", "paper"), Relation("V", "venue"),
+            Relation("ED", "edits"), Relation("E", "editor"),
+        ),
+        conds=(
+            JoinCond("A", "a_id", "W", "a_sk"),
+            JoinCond("W", "p_sk", "P", "p_id"),
+            JoinCond("P", "v_sk", "V", "v_id"),
+            JoinCond("V", "v_id", "ED", "v_sk"),
+            JoinCond("ED", "e_sk", "E", "e_id"),
+        ),
+        src=ColumnRef("A", "a_id"),
+        dst=ColumnRef("E", "e_id"),
+    )
+
+
+def dblp_model() -> GraphModel:
+    return GraphModel(
+        name="dblp",
+        vertices=(
+            VertexDef("Author", "author", "a_id", ("a_prop",)),
+            VertexDef("Editor", "editor", "e_id", ()),
+        ),
+        edges=(
+            EdgeDef("Co-auth", "Author", "Author", coauth_query()),
+            EdgeDef("Auth-Edit", "Author", "Editor", authedit_query()),
+        ),
+    )

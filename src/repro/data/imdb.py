@@ -1,0 +1,86 @@
+"""Synthetic IMDB-shaped dataset + the Figure 13 graph model.
+
+Schema: person(rid, per_id), movie(rid, m_id), and per-role cast tables
+acts / directs / writes (rid, per_sk, m_sk).
+
+Edges: Wri-Dir = PW |><| WR |><| M |><| DI |><| PD
+       Act-Dir = PA |><| AC |><| M |><| DI |><| PD
+Shared structure: M |><| DI |><| PD (the director half) appears in both —
+the JS-OJ / JS-MV candidate for this dataset.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.database import Database
+from repro.core.model import (
+    ColumnRef, EdgeDef, GraphModel, JoinCond, JoinQuery, Relation, VertexDef,
+)
+from repro.relational import Table
+
+
+def make_imdb(scale: int = 1, seed: int = 2) -> Database:
+    rng = np.random.default_rng(seed)
+    n_person = 8000 * scale
+    n_movie = 3000 * scale
+    n_acts = 24000 * scale
+    n_directs = 3500 * scale
+    n_writes = 5000 * scale
+
+    db = Database()
+    db.add_table("person", Table.from_arrays(
+        rid=np.arange(n_person, dtype=np.int32),
+        per_id=np.arange(n_person, dtype=np.int32),
+        per_prop=rng.integers(0, 100, n_person).astype(np.int32)))
+    db.add_table("movie", Table.from_arrays(
+        rid=np.arange(n_movie, dtype=np.int32),
+        m_id=np.arange(n_movie, dtype=np.int32),
+        m_year=rng.integers(1950, 2024, n_movie).astype(np.int32)))
+    for name, n in (("acts", n_acts), ("directs", n_directs),
+                    ("writes", n_writes)):
+        db.add_table(name, Table.from_arrays(
+            rid=np.arange(n, dtype=np.int32),
+            per_sk=rng.integers(0, n_person, n).astype(np.int32),
+            m_sk=rng.integers(0, n_movie, n).astype(np.int32)))
+    return db
+
+
+def _role_pair_query(name: str, role_l: str, role_r: str) -> JoinQuery:
+    return JoinQuery(
+        name=name,
+        relations=(
+            Relation("PL", "person"), Relation("RL", role_l),
+            Relation("M", "movie"), Relation("RR", role_r),
+            Relation("PR", "person"),
+        ),
+        conds=(
+            JoinCond("PL", "per_id", "RL", "per_sk"),
+            JoinCond("RL", "m_sk", "M", "m_id"),
+            JoinCond("M", "m_id", "RR", "m_sk"),
+            JoinCond("RR", "per_sk", "PR", "per_id"),
+        ),
+        src=ColumnRef("PL", "per_id"),
+        dst=ColumnRef("PR", "per_id"),
+    )
+
+
+def wridir_query() -> JoinQuery:
+    return _role_pair_query("Wri-Dir", "writes", "directs")
+
+
+def actdir_query() -> JoinQuery:
+    return _role_pair_query("Act-Dir", "acts", "directs")
+
+
+def imdb_model() -> GraphModel:
+    return GraphModel(
+        name="imdb",
+        vertices=(
+            VertexDef("Person", "person", "per_id", ("per_prop",)),
+            VertexDef("Movie", "movie", "m_id", ("m_year",)),
+        ),
+        edges=(
+            EdgeDef("Wri-Dir", "Person", "Person", wridir_query()),
+            EdgeDef("Act-Dir", "Person", "Person", actdir_query()),
+        ),
+    )

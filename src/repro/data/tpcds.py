@@ -1,0 +1,222 @@
+"""Synthetic TPC-DS subset: the tables the paper's graph models touch.
+
+Real TPC-DS at SF=10 has ~28.8M store_sales rows; this container is a CPU,
+so we keep the paper's *ratios* and scale absolute row counts down by 1000x
+("SF 10" here = 28.8k fact rows).  Skew follows TPC-DS: fact foreign keys
+are drawn from a truncated Zipf so hot items/customers exist.
+
+Tables (per sales channel c in {store, catalog, web}):
+  customer(rid, c_id, c_prop)            dimension
+  item(rid, i_id, i_price)               dimension
+  promotion(rid, p_id, p_prop)           dimension
+  outlet_<c>(rid, o_id, o_prop)          store / catalog_page / web_site
+  <c>_sales(rid, c_sk, i_sk, p_sk, o_sk) fact
+
+Graph models (Figure 11):
+  recommendation: Buy = C|><|F|><|I, Co-pur = C1|><|F1|><|I|><|F2|><|C2,
+                  Same-pro = C1|><|F1|><|P|><|F2|><|C2
+  fraud:          Sell = O|><|F|><|I, Buy = C|><|F|><|I
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.database import Database
+from repro.core.model import (
+    ColumnRef,
+    EdgeDef,
+    GraphModel,
+    JoinCond,
+    JoinQuery,
+    Relation,
+    VertexDef,
+)
+from repro.relational import Table
+
+CHANNELS = ("store", "catalog", "web")
+
+
+def _zipf_choice(rng, n: int, size: int, a: float = 1.2) -> np.ndarray:
+    """Zipf-skewed ids in [0, n) (truncated, reshuffled for anonymity)."""
+    ranks = rng.zipf(a, size=size)
+    ranks = np.minimum(ranks - 1, n - 1)
+    perm = rng.permutation(n)
+    return perm[ranks].astype(np.int32)
+
+
+def _dim(rng, n: int, id_name: str, prop_name: str) -> Table:
+    return Table.from_arrays(
+        rid=np.arange(n, dtype=np.int32),
+        **{id_name: np.arange(n, dtype=np.int32)},
+        **{prop_name: rng.integers(0, 1000, n).astype(np.int32)},
+    )
+
+
+def make_tpcds(sf: int = 10, seed: int = 0) -> Database:
+    """All three channels at the given (down-scaled) scale factor."""
+    rng = np.random.default_rng(seed)
+    n_cust = max(64, 500 * sf)
+    n_item = max(64, 100 * sf)
+    n_promo = max(16, 4 * sf)
+    db = Database()
+    db.add_table("customer", _dim(rng, n_cust, "c_id", "c_prop"))
+    db.add_table("item", _dim(rng, n_item, "i_id", "i_price"))
+    db.add_table("promotion", _dim(rng, n_promo, "p_id", "p_prop"))
+    for ch, fact_scale, n_outlet in (
+        ("store", 2880, max(4, sf // 2 + 2)),
+        ("catalog", 1440, max(4, sf // 3 + 2)),
+        ("web", 720, max(4, sf // 3 + 2)),
+    ):
+        n_fact = fact_scale * sf
+        db.add_table(f"outlet_{ch}", _dim(rng, n_outlet, "o_id", "o_prop"))
+        db.add_table(
+            f"{ch}_sales",
+            Table.from_arrays(
+                rid=np.arange(n_fact, dtype=np.int32),
+                c_sk=_zipf_choice(rng, n_cust, n_fact),
+                i_sk=_zipf_choice(rng, n_item, n_fact),
+                p_sk=rng.integers(0, n_promo, n_fact).astype(np.int32),
+                o_sk=rng.integers(0, n_outlet, n_fact).astype(np.int32),
+            ),
+        )
+    return db
+
+
+def _rel(alias: str, table: str) -> Relation:
+    return Relation(alias=alias, table=table)
+
+
+def buy_query(ch: str, name: str = "Buy") -> JoinQuery:
+    f = f"{ch}_sales"
+    return JoinQuery(
+        name=name,
+        relations=(_rel("C", "customer"), _rel("F", f), _rel("I", "item")),
+        conds=(
+            JoinCond("C", "c_id", "F", "c_sk"),
+            JoinCond("F", "i_sk", "I", "i_id"),
+        ),
+        src=ColumnRef("C", "c_id"),
+        dst=ColumnRef("I", "i_id"),
+    )
+
+
+def sell_query(ch: str, name: str = "Sell") -> JoinQuery:
+    f = f"{ch}_sales"
+    return JoinQuery(
+        name=name,
+        relations=(_rel("O", f"outlet_{ch}"), _rel("F", f), _rel("I", "item")),
+        conds=(
+            JoinCond("O", "o_id", "F", "o_sk"),
+            JoinCond("F", "i_sk", "I", "i_id"),
+        ),
+        src=ColumnRef("O", "o_id"),
+        dst=ColumnRef("I", "i_id"),
+    )
+
+
+def copur_query(ch: str, name: str = "Co-pur") -> JoinQuery:
+    f = f"{ch}_sales"
+    return JoinQuery(
+        name=name,
+        relations=(
+            _rel("C1", "customer"), _rel("F1", f), _rel("I", "item"),
+            _rel("F2", f), _rel("C2", "customer"),
+        ),
+        conds=(
+            JoinCond("C1", "c_id", "F1", "c_sk"),
+            JoinCond("F1", "i_sk", "I", "i_id"),
+            JoinCond("I", "i_id", "F2", "i_sk"),
+            JoinCond("F2", "c_sk", "C2", "c_id"),
+        ),
+        src=ColumnRef("C1", "c_id"),
+        dst=ColumnRef("C2", "c_id"),
+    )
+
+
+def samepro_query(ch: str, name: str = "Same-pro") -> JoinQuery:
+    f = f"{ch}_sales"
+    return JoinQuery(
+        name=name,
+        relations=(
+            _rel("C1", "customer"), _rel("F1", f), _rel("P", "promotion"),
+            _rel("F2", f), _rel("C2", "customer"),
+        ),
+        conds=(
+            JoinCond("C1", "c_id", "F1", "c_sk"),
+            JoinCond("F1", "p_sk", "P", "p_id"),
+            JoinCond("P", "p_id", "F2", "p_sk"),
+            JoinCond("F2", "c_sk", "C2", "c_id"),
+        ),
+        src=ColumnRef("C1", "c_id"),
+        dst=ColumnRef("C2", "c_id"),
+    )
+
+
+_VERTS = (
+    VertexDef("Customer", "customer", "c_id", ("c_prop",)),
+    VertexDef("Item", "item", "i_id", ("i_price",)),
+)
+
+
+def recommendation_model(ch: str) -> GraphModel:
+    """Figure 11(a): Buy + Co-pur + Same-pro for one channel."""
+    return GraphModel(
+        name=f"recommendation_{ch}",
+        vertices=_VERTS + (VertexDef("Promotion", "promotion", "p_id", ()),),
+        edges=(
+            EdgeDef("Buy", "Customer", "Item", buy_query(ch)),
+            EdgeDef("Co-pur", "Customer", "Customer", copur_query(ch)),
+            EdgeDef("Same-pro", "Customer", "Customer", samepro_query(ch)),
+        ),
+    )
+
+
+def fraud_model(ch: str) -> GraphModel:
+    """Figure 11(b): Sell + Buy for one channel."""
+    return GraphModel(
+        name=f"fraud_{ch}",
+        vertices=_VERTS + (VertexDef("Outlet", f"outlet_{ch}", "o_id", ()),),
+        edges=(
+            EdgeDef("Sell", "Outlet", "Item", sell_query(ch)),
+            EdgeDef("Buy", "Customer", "Item", buy_query(ch)),
+        ),
+    )
+
+
+def combined_model(rec_ch: str = "catalog", fraud_ch: str = "store") -> GraphModel:
+    """Figure 16(a): recommendation(catalog) + fraud(store), 4 queries."""
+    return GraphModel(
+        name="combined",
+        vertices=_VERTS + (
+            VertexDef("Outlet", f"outlet_{fraud_ch}", "o_id", ()),
+            VertexDef("Promotion", "promotion", "p_id", ()),
+        ),
+        edges=(
+            EdgeDef("Sell", "Outlet", "Item", sell_query(fraud_ch)),
+            EdgeDef("Buy", "Customer", "Item", buy_query(fraud_ch)),
+            EdgeDef("Co-pur", "Customer", "Customer", copur_query(rec_ch)),
+            EdgeDef("Same-pro", "Customer", "Customer", samepro_query(rec_ch)),
+        ),
+    )
+
+
+def getdisc_query(ch: str = "store", name: str = "Get-disc") -> JoinQuery:
+    """The cyclic query of Listing 1 (star/cyclic support demo)."""
+    f = f"{ch}_sales"
+    return JoinQuery(
+        name=name,
+        relations=(
+            _rel("C", "customer"), _rel("F", f), _rel("P", "promotion"),
+            _rel("I", "item"),
+        ),
+        conds=(
+            JoinCond("C", "c_id", "F", "c_sk"),
+            JoinCond("F", "i_sk", "I", "i_id"),
+            JoinCond("F", "p_sk", "P", "p_id"),
+            JoinCond("P", "p_prop", "I", "i_price"),   # cyclic closure
+        ),
+        src=ColumnRef("C", "c_id"),
+        dst=ColumnRef("I", "i_id"),
+    )

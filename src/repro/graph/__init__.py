@@ -1,0 +1,3 @@
+from repro.graph.csr import CSRGraph, build_csr, csr_offsets, pagerank
+
+__all__ = ["CSRGraph", "build_csr", "csr_offsets", "pagerank"]

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: Bloom-filter build/probe (semi-join prefilter).
+
+Beyond-paper optimization: before a distributed repartition join, each shard
+builds a Bloom filter of its build-side keys; probe-side rows that cannot
+match are dropped *before* the all_to_all, cutting the collective term of
+the roofline (see EXPERIMENTS.md §Perf).
+
+Build uses the same one-hot/max trick as the histogram kernel (OR-scatter);
+probe re-hashes and gathers bits from the VMEM-resident bitset.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 2048
+
+
+def _hash(ks: jnp.ndarray, num_bits: int, i: int) -> jnp.ndarray:
+    h = ks.astype(jnp.uint32) * jnp.uint32(2654435761 + 40503 * i) \
+        + jnp.uint32(i * 97)
+    h ^= h >> 15
+    return (h % jnp.uint32(num_bits)).astype(jnp.int32)
+
+
+def _build_kernel(keys_ref, valid_ref, bits_ref, *, num_bits: int,
+                  num_hashes: int):
+    tile = pl.program_id(0)
+
+    @pl.when(tile == 0)
+    def _init():
+        bits_ref[...] = jnp.zeros_like(bits_ref)
+
+    keys = keys_ref[...]
+    valid = valid_ref[...]
+    acc = bits_ref[...]
+    positions = jnp.arange(num_bits, dtype=jnp.int32)
+    for i in range(num_hashes):
+        pos = _hash(keys, num_bits, i)
+        onehot = ((pos[:, None] == positions[None, :]) & valid[:, None])
+        acc = jnp.maximum(acc, onehot.any(axis=0).astype(jnp.int32))
+    bits_ref[...] = acc
+
+
+def _probe_kernel(bits_ref, keys_ref, out_ref, *, num_bits: int,
+                  num_hashes: int):
+    bits = bits_ref[...]
+    keys = keys_ref[...]
+    hit = jnp.ones(keys.shape, dtype=jnp.bool_)
+    for i in range(num_hashes):
+        pos = _hash(keys, num_bits, i)
+        hit = hit & (jnp.take(bits, pos) > 0)
+    out_ref[...] = hit
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_bits", "num_hashes", "interpret"))
+def bloom_build(keys: jax.Array, valid: jax.Array, num_bits: int,
+                num_hashes: int = 2, interpret: bool = True) -> jax.Array:
+    n = keys.shape[0]
+    n_pad = ((n + TILE - 1) // TILE) * TILE
+    ks = jnp.pad(keys.astype(jnp.int32), (0, n_pad - n))
+    vm = jnp.pad(valid, (0, n_pad - n), constant_values=False)
+    kernel = functools.partial(_build_kernel, num_bits=num_bits,
+                               num_hashes=num_hashes)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_pad // TILE,),
+        in_specs=[
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((num_bits,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((num_bits,), jnp.int32),
+        interpret=interpret,
+    )(ks, vm)
+
+
+@functools.partial(jax.jit, static_argnames=("num_hashes", "interpret"))
+def bloom_probe(bits: jax.Array, keys: jax.Array, num_hashes: int = 2,
+                interpret: bool = True) -> jax.Array:
+    num_bits = bits.shape[0]
+    n = keys.shape[0]
+    n_pad = ((n + TILE - 1) // TILE) * TILE
+    ks = jnp.pad(keys.astype(jnp.int32), (0, n_pad - n))
+    kernel = functools.partial(_probe_kernel, num_bits=num_bits,
+                               num_hashes=num_hashes)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_pad // TILE,),
+        in_specs=[
+            pl.BlockSpec((num_bits,), lambda i: (0,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.bool_),
+        interpret=interpret,
+    )(bits, ks)
+    return out[:n]

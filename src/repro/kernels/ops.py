@@ -1,0 +1,36 @@
+"""Jit'd public entry points for the Pallas kernels.
+
+``interpret`` defaults to True because this container is CPU-only; the
+launcher flips it to False on real TPU backends (see repro.launch).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import bloom as _bloom
+from repro.kernels import segment_csr as _segment_csr
+from repro.kernels import sorted_probe as _sorted_probe
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def sorted_probe(sorted_keys, probe_keys):
+    return _sorted_probe.sorted_probe(
+        sorted_keys, probe_keys, interpret=not _on_tpu())
+
+
+def segment_counts(values, valid, num_segments: int):
+    return _segment_csr.segment_counts(
+        values, valid, num_segments, interpret=not _on_tpu())
+
+
+def bloom_build(keys, valid, num_bits: int, num_hashes: int = 2):
+    return _bloom.bloom_build(
+        keys, valid, num_bits, num_hashes, interpret=not _on_tpu())
+
+
+def bloom_probe(bits, keys, num_hashes: int = 2):
+    return _bloom.bloom_probe(bits, keys, num_hashes,
+                              interpret=not _on_tpu())

@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function is the semantic reference the kernels are tested against
+(tests sweep shapes/dtypes and assert_allclose kernel-vs-ref).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sorted_probe(sorted_keys: jnp.ndarray, probe_keys: jnp.ndarray):
+    """Two-sided binary search: (lo, hi) match ranges per probe key."""
+    lo = jnp.searchsorted(sorted_keys, probe_keys, side="left")
+    hi = jnp.searchsorted(sorted_keys, probe_keys, side="right")
+    return lo.astype(jnp.int32), hi.astype(jnp.int32)
+
+
+def segment_counts(values: jnp.ndarray, valid: jnp.ndarray,
+                   num_segments: int) -> jnp.ndarray:
+    """Histogram of ``values`` (masked) into ``num_segments`` bins."""
+    return (
+        jnp.zeros((num_segments,), jnp.int32)
+        .at[values]
+        .add(valid.astype(jnp.int32), mode="drop")
+    )
+
+
+def _bloom_hashes(keys: jnp.ndarray, num_bits: int, num_hashes: int):
+    """Cheap multiplicative hashes -> (num_hashes, N) bit positions."""
+    ks = keys.astype(jnp.uint32)
+    out = []
+    for i in range(num_hashes):
+        h = ks * jnp.uint32(2654435761 + 40503 * i) + jnp.uint32(i * 97)
+        h ^= h >> 15
+        out.append((h % jnp.uint32(num_bits)).astype(jnp.int32))
+    return jnp.stack(out)
+
+
+def bloom_build(keys: jnp.ndarray, valid: jnp.ndarray, num_bits: int,
+                num_hashes: int = 2) -> jnp.ndarray:
+    """Bloom bitset (int32 0/1 per bit — word-packing left to the kernel)."""
+    pos = _bloom_hashes(keys, num_bits, num_hashes)
+    bits = jnp.zeros((num_bits,), jnp.int32)
+    for i in range(num_hashes):
+        bits = bits.at[pos[i]].max(valid.astype(jnp.int32))
+    return bits
+
+
+def bloom_probe(bits: jnp.ndarray, keys: jnp.ndarray,
+                num_hashes: int = 2) -> jnp.ndarray:
+    """True where the key is possibly present (no false negatives)."""
+    num_bits = bits.shape[0]
+    pos = _bloom_hashes(keys, num_bits, num_hashes)
+    hit = jnp.ones(keys.shape, dtype=bool)
+    for i in range(num_hashes):
+        hit = hit & (bits[pos[i]] > 0)
+    return hit
+
+
+def flash_attention(q, k, v, causal: bool = True, window=None):
+    """Dense GQA attention oracle for the flash kernel (no positions arg:
+    q/k indices ARE the positions, matching the kernel's iota masks)."""
+    b, sq, hq, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qf = q.astype(jnp.float32) / jnp.sqrt(dh)
+    qf = qf.reshape(b, sq, hkv, g, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32))
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, dh).astype(q.dtype)

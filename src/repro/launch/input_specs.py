@@ -1,0 +1,71 @@
+"""ShapeDtypeStruct stand-ins for every (architecture x shape) cell.
+
+No device allocation — the dry-run lowers and compiles against these.
+Conventions per the assignment:
+  * train_*   -> train_step(params, opt_state, batch)
+  * prefill_* -> prefill(params, batch)  (build a seq_len KV cache)
+  * decode_*  -> decode_step(params, cache, token) with a seq_len cache
+  * [vlm]: 256 of the seq positions are precomputed patch embeddings
+  * [audio]: the encoder consumes 1536 precomputed frame embeddings
+    (source side, additional to the decoder's seq_len)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig, ShapeConfig
+from repro.models.decode import init_cache
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig,
+                with_labels: bool) -> Dict[str, jax.ShapeDtypeStruct]:
+    b, s = shape.global_batch, shape.seq_len
+    n_tok = s - cfg.frontend_len if cfg.frontend == "patch" else s
+    out = {"tokens": jax.ShapeDtypeStruct((b, n_tok), I32)}
+    if with_labels:
+        out["labels"] = jax.ShapeDtypeStruct((b, n_tok), I32)
+    if cfg.frontend == "patch":
+        out["embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_len, cfg.d_model), F32)
+    if cfg.frontend == "frames":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_len, cfg.d_model), F32)
+    return out
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeConfig):
+    src_len = cfg.frontend_len if cfg.encoder is not None else 0
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len,
+                           src_len=src_len))
+
+
+def token_spec(shape: ShapeConfig) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((shape.global_batch,), I32)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """All abstract inputs for this cell, keyed by role."""
+    if shape.kind == "train":
+        return {"batch": batch_specs(cfg, shape, with_labels=True)}
+    if shape.kind == "prefill":
+        return {"batch": batch_specs(cfg, shape, with_labels=False)}
+    if shape.kind == "decode":
+        return {"cache": cache_specs(cfg, shape),
+                "token": token_spec(shape)}
+    raise ValueError(shape.kind)
+
+
+def cell_is_applicable(cfg: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """long_500k needs sub-quadratic decode state (window/recurrent)."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, ("full-attention cache at 524288 positions is "
+                       "quadratic-cost/unbounded; skipped per spec "
+                       "(see DESIGN.md §Arch-applicability)")
+    return True, ""

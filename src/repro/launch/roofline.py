@@ -1,0 +1,126 @@
+"""Roofline report: three terms per (arch x shape x mesh) from dry-run JSON.
+
+    PYTHONPATH=src python -m repro.launch.roofline [--dir dryrun_results]
+        [--markdown]
+
+Terms (per training/serving STEP, per the assignment):
+  compute    = HLO_FLOPs            / (chips x 197e12 FLOP/s)     [bf16 MXU]
+  memory     = HLO_bytes            / (chips x 819e9  B/s)        [HBM]
+  collective = collective_bytes     / (chips x 50e9   B/s)        [ICI/link]
+
+HLO_FLOPs / HLO_bytes / collective_bytes are loop-expanded PER-DEVICE
+numbers from hlo_analysis.py, so the division by chips is already folded
+in — we divide the per-device value by the per-chip peak directly.
+
+MODEL_FLOPS = 6*N*T for training (N = params, active for MoE), 2*N*T for
+inference (forward only).  The ratio MODEL_FLOPS/(HLO_FLOPs*chips) exposes
+remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12      # bf16 per chip (TPU v5e)
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per chip (1 ICI link, conservative)
+
+
+def roofline_row(rep: Dict) -> Dict:
+    pd = rep["per_device"]
+    chips = rep["chips"]
+    compute_s = pd["flops"] / PEAK_FLOPS
+    memory_s = pd["bytes_accessed"] / HBM_BW
+    coll_s = pd["collective_bytes"].get("total", 0.0) / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    n = (rep["active_params"] if rep["shape"].startswith(("train",))
+         else rep["active_params"])
+    tokens = rep["tokens"]
+    mult = 6 if rep["shape"].startswith("train") else 2
+    model_flops = mult * n * tokens
+    hlo_total = pd["flops"] * chips
+    useful = model_flops / hlo_total if hlo_total else 0.0
+    bound_s = max(terms.values())
+    # roofline fraction: useful model flops per second achievable at the
+    # bottleneck, vs the pure-compute peak
+    step_flops_rate = model_flops / chips / max(bound_s, 1e-12)
+    frac = step_flops_rate / PEAK_FLOPS
+    return {
+        "arch": rep["arch"], "shape": rep["shape"],
+        "mesh": "2x16x16" if rep["multi_pod"] else "16x16",
+        "chips": chips,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_s, "dominant": dominant,
+        "model_flops": model_flops, "useful_ratio": useful,
+        "roofline_frac": frac,
+        "hbm_gib_per_dev": (pd["argument_bytes"] + pd["temp_bytes"]) / 2**30,
+    }
+
+
+def load_rows(directory: str) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            rep = json.load(f)
+        if rep.get("status") == "ok":
+            rows.append(roofline_row(rep))
+        elif rep.get("status") == "skipped":
+            rows.append({"arch": rep["arch"], "shape": rep["shape"],
+                         "mesh": "2x16x16" if rep["multi_pod"] else "16x16",
+                         "skipped": rep["reason"]})
+    return rows
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="dryrun_results")
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--mesh", default=None, choices=["16x16", "2x16x16"])
+    args = ap.parse_args()
+    rows = load_rows(args.dir)
+    if args.mesh:
+        rows = [r for r in rows if r.get("mesh") == args.mesh or "skipped" in r]
+
+    if args.markdown:
+        print("| arch | shape | mesh | compute | memory | collective | "
+              "dominant | useful | roofline% | HBM GiB/dev |")
+        print("|---|---|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            if "skipped" in r:
+                print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                      f"— skipped: {r['skipped'][:60]}... | | | | | | |")
+                continue
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                  f"| {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} "
+                  f"| {fmt_s(r['collective_s'])} | **{r['dominant']}** "
+                  f"| {r['useful_ratio']:.2f} | {r['roofline_frac']*100:.1f}% "
+                  f"| {r['hbm_gib_per_dev']:.1f} |")
+    else:
+        for r in rows:
+            if "skipped" in r:
+                print(f"{r['arch']:<24}{r['shape']:<14}{r['mesh']:<9}"
+                      f"SKIPPED: {r['skipped'][:50]}")
+                continue
+            print(f"{r['arch']:<24}{r['shape']:<14}{r['mesh']:<9}"
+                  f"c={fmt_s(r['compute_s']):>9} m={fmt_s(r['memory_s']):>9} "
+                  f"x={fmt_s(r['collective_s']):>9} dom={r['dominant']:<11}"
+                  f"useful={r['useful_ratio']:.2f} "
+                  f"roof={r['roofline_frac']*100:5.1f}% "
+                  f"hbm={r['hbm_gib_per_dev']:6.1f}GiB")
+
+
+if __name__ == "__main__":
+    main()

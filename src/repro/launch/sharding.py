@@ -1,0 +1,274 @@
+"""Sharding rules: FSDP over ``data`` x TP over ``model`` x DP over ``pod``.
+
+Named rules with divisibility fallbacks: a dimension is only sharded when it
+divides evenly by the axis size; otherwise the rule degrades gracefully
+(replicate that dim) instead of failing — e.g. internvl2's 14 attention
+heads and odd 151655 vocab replicate over ``model`` while its FFN shards.
+
+Conventions:
+  * weights:     second/contract dim -> model (TP), other large dim -> data
+                 (FSDP: all-gather params per block, reduce-scatter grads)
+  * MoE experts: expert dim -> model (EP), d_model dim -> data
+  * activations: batch -> (pod, data), heads/ffn/expert dims -> model
+  * KV caches:   batch -> (pod, data); kv-head dim -> model when divisible
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+from repro.launch.mesh import dp_axes
+from repro.models.config import ArchConfig
+from repro.models.model import ActSharding
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    n = _axis_size(mesh, axes)
+    return dim % n == 0 and dim >= n
+
+
+ATTN_Q = ("wq", "bq")
+ATTN_KV = ("wk", "wv", "bk", "bv")
+ATTN_O = ("wo",)
+
+
+def param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh,
+               cfg: Optional[ArchConfig] = None,
+               dp_override=None) -> PS:
+    """PartitionSpec for one parameter, by name pattern + divisibility.
+
+    Attention projections are TP-sharded over ``model`` only when the HEAD
+    count divides the axis — otherwise XLA lands the sharding on head_dim
+    and every score einsum psums a (B,H,Sq,Sk) fp32 tensor (measured: 3 x
+    144 GiB/step on gemma-2b before this rule).  Head-indivisible archs
+    replicate attention weights over ``model`` (they are small) and keep
+    TP for the FFN.
+    """
+    dp = dp_axes(mesh) if dp_override is None else dp_override
+    dp = dp if dp else None
+    stacked = "cycles" in path or "layers" in path  # leading cycle dim
+    lead = (None,) if stacked else ()
+    core = shape[1:] if stacked else shape
+
+    def ok(i, axes):
+        return _fits(core[i], mesh, axes)
+
+    name = path.rsplit("/", 1)[-1]
+    model_n = mesh.shape["model"]
+    heads_div = cfg is not None and cfg.num_heads % model_n == 0
+    kv_div = cfg is not None and cfg.num_kv_heads % model_n == 0
+
+    if len(core) == 1:
+        return PS(*lead, None)                      # norms, biases, lam
+
+    if name in ("embed", "head"):
+        v_dim, d_dim = (0, 1) if name == "embed" else (1, 0)
+        spec = [None, None]
+        if ok(v_dim, "model"):
+            spec[v_dim] = "model"
+        if ok(d_dim, dp):
+            spec[d_dim] = dp
+        return PS(*spec)
+
+    if name in ("w_router",):
+        return PS(*lead, dp if ok(0, dp) else None, None)
+
+    if len(core) == 3:                              # MoE experts
+        # EP over model on the expert dim.  The second shard goes on the
+        # FFN-hidden dim over data — NOT on d_model: FSDP-gathering 450GB
+        # of expert weights per microbatch measured 88 TiB/step of
+        # all-gathers on qwen3-moe; sharding F instead turns that into
+        # one (E/m, C, D) reduce-scatter per layer (~30x less traffic),
+        # and per-device weight storage still fits.
+        e = "model" if ok(0, "model") else None
+        f_dim = 2 if name in ("w_gate", "w_up") else 1   # w_down: (E, F, D)
+        spec = [e, None, None]
+        if ok(f_dim, dp):
+            spec[f_dim] = dp
+        return PS(*lead, *spec)
+
+    if len(core) == 2:
+        if name in ATTN_Q or name in ATTN_KV or name in ATTN_O:
+            head_ok = kv_div if name in ATTN_KV else heads_div
+            out_side = name in ATTN_O
+            i, j = (0, 1) if out_side else (1, 0)
+            spec = [None, None]
+            if head_ok and ok(i, "model"):
+                spec[i] = "model"
+            if ok(j, dp):
+                spec[j] = dp
+            return PS(*lead, *spec)
+        # contract-dim heuristic: output-side mats have the model-parallel
+        # dim FIRST; input-side mats have it LAST.
+        out_side = name in ("w_down", "w_out", "w_shared_down")
+        i, j = (0, 1) if out_side else (1, 0)
+        spec = [None, None]
+        if ok(i, "model"):
+            spec[i] = "model"
+        if ok(j, dp):
+            spec[j] = dp
+        return PS(*lead, *spec)
+
+    return PS(*lead, *(None,) * len(core))
+
+
+ZERO1_MAX_PARAMS = 2e9   # replicate weights over dp below this size
+
+
+def zero_policy(cfg: Optional[ArchConfig]) -> str:
+    """ZeRO-1 (weights replicated over dp, optimizer states sharded) for
+    small models: re-gathering a 2.5B model's weights every microbatch cost
+    252 GiB/step of collectives on gemma-2b; replicating them costs ~5 GiB
+    of HBM and one gradient reduction.  Big models need ZeRO-3."""
+    if cfg is None:
+        return "zero3"
+    return "zero1" if cfg.n_params() <= ZERO1_MAX_PARAMS else "zero3"
+
+
+def params_shardings(abstract, mesh: Mesh, cfg: Optional[ArchConfig] = None,
+                     policy: Optional[str] = None):
+    """Tree of NamedShardings matching an abstract param tree.
+
+    ``policy``: "zero3" shards weights over dp (default for big models),
+    "zero1" replicates weights over dp (optimizer states should be built
+    with policy="zero3" regardless — they are only touched once per step).
+    """
+    policy = policy or zero_policy(cfg)
+    dp_override = () if policy == "zero1" else None
+    # sequence-parallel archs (head-indivisible) under ZeRO-1: the model
+    # axis is busy sharding the sequence, so TP-sharding FFN weights only
+    # causes per-layer resharding; replicate everything except the
+    # embedding (vocab stays TP for the LM head).
+    seq_par_z1 = (policy == "zero1" and cfg is not None
+                  and cfg.num_heads % mesh.shape["model"] != 0)
+
+    def visit(path, leaf):
+        pstr = "/".join(str(getattr(k, "key", k)) for k in path)
+        name = pstr.rsplit("/", 1)[-1]
+        if seq_par_z1 and name not in ("embed", "head"):
+            return NamedSharding(mesh, PS(*(None,) * len(leaf.shape)))
+        return NamedSharding(
+            mesh, param_spec(pstr, leaf.shape, mesh, cfg,
+                             dp_override=dp_override))
+
+    return jax.tree_util.tree_map_with_path(visit, abstract)
+
+
+def act_sharding(cfg: ArchConfig, mesh: Mesh, batch: int,
+                 seq: Optional[int] = None) -> ActSharding:
+    """Activation constraints: TP on heads when they divide ``model``;
+    otherwise **sequence parallelism** — shard the seq dim over ``model``
+    (attention/FFN/norms are row-wise; only K/V need a small all-gather).
+    Replicating attention on the model axis instead costs ~16x its FLOPs
+    (measured 8e13 extra FLOPs/dev on gemma-2b train_4k)."""
+    dp = dp_axes(mesh)
+    model_n = mesh.shape["model"]
+    bdim = dp if batch % _axis_size(mesh, dp) == 0 else None
+    heads_div = cfg.num_heads % model_n == 0
+    # sequence parallelism requires every mixer to be row-wise in seq:
+    # recurrent kinds (rglru/mlstm/slstm) scan over the sequence, and the
+    # chunked-attention prefill path maps over seq chunks — both reshard
+    # every step if seq is model-sharded (measured 16x regression on
+    # xlstm train_4k, 7x on llama3.2 prefill_32k).  Callers therefore only
+    # pass ``seq`` for dense-attention TRAIN shapes.
+    attn_only = all(k in ("attn", "swa") for k in cfg.layer_kinds())
+    seq_par = ((not heads_div) and attn_only and seq is not None
+               and seq % model_n == 0)
+    sdim = "model" if seq_par else None
+    heads = "model" if heads_div else None
+    ffn_div = cfg.d_ff % model_n == 0 and cfg.d_ff > 0
+    # LM head: vocab TP whenever the vocab divides (the seq all-gather it
+    # implies is ~256MB vs multi-GB seq-sharded full-vocab logits)
+    vocab_div = cfg.vocab_size % model_n == 0
+    kv_div = cfg.num_kv_heads % model_n == 0
+    return ActSharding(
+        hidden=PS(bdim, sdim, None),
+        heads=PS(bdim, sdim, heads, None),
+        kv=PS(bdim, sdim, "model" if kv_div else None, None),
+        ffn=PS(bdim, sdim, "model" if (ffn_div and not seq_par) else None),
+        expert=PS("model", None, None) if cfg.moe else None,
+        logits=PS(bdim, sdim if not vocab_div else None,
+                  "model" if vocab_div else None),
+        moe_mesh=mesh if cfg.moe else None,
+        moe_dp_axes=dp if cfg.moe else (),
+    )
+
+
+def batch_shardings(cfg: ArchConfig, mesh: Mesh, batch: int,
+                    kind: str) -> Dict[str, Any]:
+    """Shardings for the input batch pytree."""
+    dp = dp_axes(mesh)
+    bdim = dp if batch % _axis_size(mesh, dp) == 0 else None
+    out: Dict[str, Any] = {
+        "tokens": NamedSharding(mesh, PS(bdim, None)),
+    }
+    if kind == "train":
+        out["labels"] = NamedSharding(mesh, PS(bdim, None))
+    if cfg.frontend == "patch":
+        out["embeds"] = NamedSharding(mesh, PS(bdim, None, None))
+    if cfg.frontend == "frames":
+        out["frames"] = NamedSharding(mesh, PS(bdim, None, None))
+    return out
+
+
+def cache_shardings(cache_abstract, cfg: ArchConfig, mesh: Mesh, batch: int,
+                    for_decode: bool = True):
+    """Shardings for the cache pytree (batch over dp, kv/state dims over
+    model when divisible).
+
+    ``for_decode=False`` (prefill output) skips the head_dim fallback shard:
+    prefill computes attention from the same K/V it writes, and a Dh-sharded
+    layout back-propagates into every score einsum (measured ~1.1 TiB of
+    per-block collectives on gemma prefill_32k).  Decode re-jits with the
+    Dh-sharded layout, which is what makes its cache fit HBM."""
+    dp = dp_axes(mesh)
+    bdim = dp if batch % _axis_size(mesh, dp) == 0 else None
+    model_n = mesh.shape["model"]
+
+    def visit(path, leaf):
+        names = [str(getattr(k, "key", k)) for k in path]
+        name = names[-1]
+        shape = leaf.shape
+        if name == "pos":
+            return NamedSharding(mesh, PS())
+        stacked = "cycles" in names
+        lead = (None,) if stacked else ()
+        core = shape[1:] if stacked else shape
+        if name in ("k", "v", "xk", "xv"):
+            # (B, S, Hkv, Dh): shard kv heads over model when divisible;
+            # otherwise shard head_dim — the score/output contractions then
+            # psum small (B,H,Sq) tensors instead of replicating a multi-GiB
+            # cache per model shard (llama3.2 decode_32k: 84 -> ~6 GiB/dev)
+            if core[2] % model_n == 0:
+                return NamedSharding(mesh, PS(*lead, bdim, None, "model",
+                                              None))
+            dh = "model" if (for_decode and core[3] % model_n == 0) else None
+            return NamedSharding(mesh, PS(*lead, bdim, None, None, dh))
+        if name == "c" and len(core) == 4:          # mLSTM (B, H, Dh, Dh)
+            dh = "model" if core[2] % model_n == 0 else None
+            return NamedSharding(mesh, PS(*lead, bdim, None, dh, None))
+        if name == "n" and len(core) == 3:          # (B, H, Dh)
+            dh = "model" if core[2] % model_n == 0 else None
+            return NamedSharding(mesh, PS(*lead, bdim, None, dh))
+        if name == "enc_out":
+            return NamedSharding(mesh, PS(bdim, None, None))
+        if len(core) >= 2 and core[-1] % model_n == 0:
+            return NamedSharding(
+                mesh, PS(*lead, bdim, *(None,) * (len(core) - 2), "model"))
+        return NamedSharding(mesh, PS(*lead, bdim,
+                                      *(None,) * (len(core) - 1)))
+
+    return jax.tree_util.tree_map_with_path(visit, cache_abstract)

@@ -1,0 +1,14 @@
+from repro.models.config import ArchConfig, MoESpec, EncoderSpec, ShapeConfig, SHAPES
+from repro.models.model import (
+    ActSharding,
+    abstract_params,
+    forward,
+    init_params,
+)
+from repro.models.decode import decode_step, init_cache, prefill
+
+__all__ = [
+    "ArchConfig", "MoESpec", "EncoderSpec", "ShapeConfig", "SHAPES",
+    "ActSharding", "abstract_params", "forward", "init_params",
+    "decode_step", "init_cache", "prefill",
+]

@@ -1,0 +1,330 @@
+"""Prefill + single-token decode with static-shape caches.
+
+Cache sizes are the serving contract:
+  attn   -> (cycles, B, max_len, Hkv, Dh)        full causal cache
+  swa    -> (cycles, B, min(window, max_len), ...) ring buffer — O(window)
+  rglru  -> (cycles, B, D) + conv tail            O(1)
+  mlstm  -> (cycles, B, H, Dh, Dh) + (.., Dh)     O(1)
+  slstm  -> (cycles, B, D) x3                     O(1)
+
+This is why the long_500k cell is runnable for SWA/recurrent archs: their
+decode working set is bounded by window/state size, not sequence length.
+Keys are stored *post-RoPE*; ring-buffer positions are reconstructed from
+the scalar ``pos`` (no position array in the cache).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import recurrent as rec
+from repro.models.config import ArchConfig
+from repro.models.layers import ACT_DTYPE, attention, rmsnorm, rope
+from repro.models.model import (
+    ActSharding,
+    P,
+    _embed,
+    _encode,
+    _ffn_apply,
+    shard,
+)
+
+
+def _cache_len(cfg: ArchConfig, kind: str, max_len: int) -> int:
+    if kind == "swa":
+        return min(cfg.window, max_len)
+    return max_len
+
+
+def _layer_cache(cfg: ArchConfig, kind: str, b: int, max_len: int,
+                 src_len: int) -> Dict[str, jax.Array]:
+    hkv, dh, d = cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    h = max(cfg.num_heads, 1)
+    if kind in ("attn", "swa"):
+        s = _cache_len(cfg, kind, max_len)
+        c = {"k": jnp.zeros((b, s, hkv, dh), ACT_DTYPE),
+             "v": jnp.zeros((b, s, hkv, dh), ACT_DTYPE)}
+        if cfg.encoder is not None and kind == "attn":
+            c["xk"] = jnp.zeros((b, src_len, hkv, dh), ACT_DTYPE)
+            c["xv"] = jnp.zeros((b, src_len, hkv, dh), ACT_DTYPE)
+        return c
+    if kind == "rglru":
+        return {"h": jnp.zeros((b, d), jnp.float32),
+                "conv": jnp.zeros((b, rec.CONV_WIDTH - 1, d), ACT_DTYPE)}
+    if kind == "mlstm":
+        dh_m = d // h
+        return {"c": jnp.zeros((b, h, dh_m, dh_m), jnp.float32),
+                "n": jnp.zeros((b, h, dh_m), jnp.float32)}
+    if kind == "slstm":
+        z = jnp.zeros((b, d), jnp.float32)
+        return {"c": z, "n": z, "m": z}
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               src_len: int = 0) -> Dict[str, Any]:
+    pat = cfg.block_pattern
+    n_cycles, tail = divmod(cfg.num_layers, len(pat))
+    cyc = {}
+    for j, kind in enumerate(pat):
+        one = _layer_cache(cfg, kind, batch, max_len, src_len)
+        cyc[f"s{j}_{kind}"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (n_cycles,) + x.shape), one)
+    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32), "cycles": cyc}
+    for t in range(tail):
+        cache[f"tail_{t}"] = _layer_cache(cfg, pat[t], batch, max_len, src_len)
+    if cfg.encoder is not None:
+        cache["enc_out"] = jnp.zeros((batch, src_len, cfg.d_model), ACT_DTYPE)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# decode-side attention against the cache
+# ---------------------------------------------------------------------------
+
+def _ring_positions(kind: str, s_cache: int, pos: jax.Array) -> Tuple:
+    slots = jnp.arange(s_cache, dtype=jnp.int32)
+    if kind == "swa":
+        k_pos = pos - jnp.mod(pos - slots, s_cache)
+        valid = k_pos >= 0
+    else:
+        k_pos = slots
+        valid = slots <= pos
+    return k_pos, valid
+
+
+def _attn_step(p: P, cfg: ArchConfig, x, cache_kv, pos, kind: str,
+               sh: ActSharding, xkv=None):
+    """x: (B,1,D); cache_kv: {"k","v"}; returns (out, new cache_kv)."""
+    b = x.shape[0]
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(b, 1, cfg.num_heads, cfg.head_dim)
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    k = k.reshape(b, 1, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(b, 1, cfg.num_kv_heads, cfg.head_dim)
+    posb = jnp.broadcast_to(pos[None], (b, 1)).astype(jnp.int32)
+    q = rope(q, posb, cfg.rope_theta)
+    k = rope(k, posb, cfg.rope_theta)
+
+    s_cache = cache_kv["k"].shape[1]
+    slot = jnp.mod(pos, s_cache) if kind == "swa" else pos
+    ck = jax.lax.dynamic_update_slice(
+        cache_kv["k"], k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(
+        cache_kv["v"], v, (0, slot, 0, 0))
+    k_pos, valid = _ring_positions(kind, s_cache, pos)
+    k_posb = jnp.broadcast_to(k_pos[None], (b, s_cache))
+    validb = jnp.broadcast_to(valid[None], (b, s_cache))
+    out = attention(q, ck, cv, posb, k_posb, causal=True,
+                    window=cfg.window if kind == "swa" else None,
+                    kv_valid=validb)
+    out = out.reshape(b, 1, cfg.q_dim) @ p["wo"]
+
+    new_cache = dict(cache_kv)
+    new_cache["k"], new_cache["v"] = ck, cv
+    return out, new_cache
+
+
+def _layer_step(p: P, kind: str, cfg: ArchConfig, x, lc, pos,
+                sh: ActSharding, src_len: int):
+    """One block for one token.  x: (B,1,D)."""
+    h = rmsnorm(x, p["norm1"])
+    new_lc = dict(lc)
+    if kind in ("attn", "swa"):
+        mixed, kv = _attn_step(p["attn"], cfg, h, {"k": lc["k"], "v": lc["v"]},
+                               pos, kind, sh)
+        new_lc.update(kv)
+    elif kind == "rglru":
+        out, hn, conv = rec.rglru_step(p["rglru"], h[:, 0, :], lc["h"],
+                                       lc["conv"])
+        mixed = out[:, None, :]
+        new_lc["h"], new_lc["conv"] = hn, conv
+    elif kind == "mlstm":
+        out, (c, n) = rec.mlstm_step(p["mlstm"], h[:, 0, :],
+                                     (lc["c"], lc["n"]),
+                                     max(cfg.num_heads, 1))
+        mixed = out[:, None, :]
+        new_lc["c"], new_lc["n"] = c, n
+    elif kind == "slstm":
+        out, (c, n, m) = rec.slstm_step(p["slstm"], h[:, 0, :],
+                                        (lc["c"], lc["n"], lc["m"]))
+        mixed = out[:, None, :]
+        new_lc["c"], new_lc["n"], new_lc["m"] = c, n, m
+    else:
+        raise ValueError(kind)
+    x = x + mixed
+    if "xattn" in p and "xk" in lc:     # cross-attention against encoder
+        b = x.shape[0]
+        hx = rmsnorm(x, p["norm_x"])
+        q = (hx @ p["xattn"]["wq"]).reshape(b, 1, cfg.num_heads, cfg.head_dim)
+        posb = jnp.broadcast_to(pos[None], (b, 1)).astype(jnp.int32)
+        src_pos = jnp.broadcast_to(
+            jnp.arange(src_len, dtype=jnp.int32)[None], (b, src_len))
+        xo = attention(q, lc["xk"], lc["xv"], posb, src_pos, causal=False)
+        x = x + xo.reshape(b, 1, cfg.q_dim) @ p["xattn"]["wo"]
+    ffn = _ffn_apply(p, cfg, x, sh)
+    if ffn is not None:
+        x = x + ffn
+    return x, new_lc
+
+
+def decode_step(params: P, cfg: ArchConfig, cache: Dict[str, Any],
+                token: jax.Array, sh: Optional[ActSharding] = None):
+    """One serving step: token (B,) -> (logits (B,V), new cache)."""
+    sh = sh or ActSharding()
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(ACT_DTYPE)
+    if cfg.name.startswith(("gemma", "recurrentgemma")):
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(ACT_DTYPE)
+
+    pat = cfg.block_pattern
+    src_len = cache["enc_out"].shape[1] if "enc_out" in cache else 0
+
+    def cycle_body(x, scanned):
+        cp, cc = scanned
+        new_cc = {}
+        for j, kind in enumerate(pat):
+            slot = f"s{j}_{kind}"
+            x, new_cc[slot] = _layer_step(cp[slot], kind, cfg, x, cc[slot],
+                                          pos, sh, src_len)
+        return x, new_cc
+
+    if params["cycles"]:
+        x, new_cycles = jax.lax.scan(
+            cycle_body, x, (params["cycles"], cache["cycles"]))
+    else:
+        new_cycles = cache["cycles"]
+    new_cache: Dict[str, Any] = {"pos": pos + 1, "cycles": new_cycles}
+    if "enc_out" in cache:
+        new_cache["enc_out"] = cache["enc_out"]
+    t = 0
+    while f"tail_{t}" in params:
+        x, new_cache[f"tail_{t}"] = _layer_step(
+            params[f"tail_{t}"], pat[t], cfg, x, cache[f"tail_{t}"], pos, sh,
+            src_len)
+        t += 1
+
+    x = rmsnorm(x, params["final_norm"])
+    head = params.get("head")
+    logits = (x @ params["embed"].T.astype(x.dtype) if head is None
+              else x @ head)
+    return logits[:, 0, :].astype(jnp.float32), new_cache
+
+
+# ---------------------------------------------------------------------------
+# prefill: full sequence forward that also fills the cache
+# ---------------------------------------------------------------------------
+
+def prefill(params: P, cfg: ArchConfig, batch: Dict[str, jax.Array],
+            max_len: int, sh: Optional[ActSharding] = None):
+    """Run the prompt; returns (last-token logits, primed cache)."""
+    sh = sh or ActSharding()
+    x, positions = _embed(params, cfg, batch, sh)
+    b, s, _ = x.shape
+    enc_out = enc_pos = None
+    if cfg.encoder is not None:
+        enc_out, enc_pos = _encode(params, cfg, batch["frames"], sh)
+    src_len = enc_out.shape[1] if enc_out is not None else 0
+    cache = init_cache(cfg, b, max_len, src_len)
+
+    pat = cfg.block_pattern
+
+    def fill_layer(p, kind, x, lc):
+        h = rmsnorm(x, p["norm1"])
+        new_lc = dict(lc)
+        if kind in ("attn", "swa"):
+            q = h @ p["attn"]["wq"]
+            if "bq" in p["attn"]:
+                q = q + p["attn"]["bq"]
+            q = q.reshape(b, s, cfg.num_heads, cfg.head_dim)
+            k = h @ p["attn"]["wk"]
+            v = h @ p["attn"]["wv"]
+            if "bk" in p["attn"]:
+                k, v = k + p["attn"]["bk"], v + p["attn"]["bv"]
+            k = k.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+            v = v.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+            window = cfg.window if kind == "swa" else None
+            mixed = attention(k=k, v=v, q=q, q_pos=positions,
+                              k_pos=positions, causal=True, window=window)
+            mixed = mixed.reshape(b, s, cfg.q_dim) @ p["attn"]["wo"]
+            # write the (roped) suffix into the cache
+            s_cache = lc["k"].shape[1]
+            if kind == "swa" and s > s_cache:
+                ks, vs = k[:, -s_cache:], v[:, -s_cache:]
+                # ring layout: entry at position p lives in slot p % s_cache
+                first = s - s_cache
+                roll = jnp.mod(first, s_cache)
+                ks = jnp.roll(ks, shift=roll, axis=1)
+                vs = jnp.roll(vs, shift=roll, axis=1)
+                new_lc["k"], new_lc["v"] = ks, vs
+            else:
+                new_lc["k"] = jax.lax.dynamic_update_slice(
+                    lc["k"], k, (0, 0, 0, 0))
+                new_lc["v"] = jax.lax.dynamic_update_slice(
+                    lc["v"], v, (0, 0, 0, 0))
+            if "xattn" in p and enc_out is not None:
+                sk = enc_out.shape[1]
+                new_lc["xk"] = (enc_out @ p["xattn"]["wk"]).reshape(
+                    b, sk, cfg.num_kv_heads, cfg.head_dim)
+                new_lc["xv"] = (enc_out @ p["xattn"]["wv"]).reshape(
+                    b, sk, cfg.num_kv_heads, cfg.head_dim)
+        elif kind == "rglru":
+            mixed, hlast = rec.rglru_seq(p["rglru"], h)
+            new_lc["h"] = hlast
+            tail = h[:, -(rec.CONV_WIDTH - 1):, :] @ p["rglru"]["w_x"]
+            new_lc["conv"] = tail
+        elif kind == "mlstm":
+            mixed, (c, n) = rec.mlstm_seq(p["mlstm"], h,
+                                          max(cfg.num_heads, 1))
+            new_lc["c"], new_lc["n"] = c, n
+        elif kind == "slstm":
+            mixed, (c, n, m) = rec.slstm_seq(p["slstm"], h)
+            new_lc["c"], new_lc["n"], new_lc["m"] = c, n, m
+        x = x + mixed
+        if "xattn" in p and enc_out is not None:
+            hx = rmsnorm(x, p["norm_x"])
+            q = (hx @ p["xattn"]["wq"]).reshape(b, s, cfg.num_heads,
+                                                cfg.head_dim)
+            xo = attention(q, new_lc["xk"], new_lc["xv"], positions,
+                           enc_pos, causal=False)
+            x = x + xo.reshape(b, s, cfg.q_dim) @ p["xattn"]["wo"]
+        ffn = _ffn_apply(p, cfg, x, sh)
+        if ffn is not None:
+            x = shard(x + ffn, sh.hidden)
+        return x, new_lc
+
+    def cycle_body(x, scanned):
+        cp, cc = scanned
+        new_cc = {}
+        for j, kind in enumerate(pat):
+            slot = f"s{j}_{kind}"
+            x, new_cc[slot] = fill_layer(cp[slot], kind, x, cc[slot])
+        return x, new_cc
+
+    if params["cycles"]:
+        x, new_cycles = jax.lax.scan(
+            cycle_body, x, (params["cycles"], cache["cycles"]))
+        cache["cycles"] = new_cycles
+    t = 0
+    while f"tail_{t}" in params:
+        x, cache[f"tail_{t}"] = fill_layer(params[f"tail_{t}"], pat[t], x,
+                                           cache[f"tail_{t}"])
+        t += 1
+
+    cache["pos"] = jnp.asarray(s, jnp.int32)
+    if enc_out is not None:
+        cache["enc_out"] = enc_out
+    x = rmsnorm(x, params["final_norm"])
+    head = params.get("head")
+    logits = (x[:, -1:] @ params["embed"].T.astype(x.dtype) if head is None
+              else x[:, -1:] @ head)
+    return logits[:, 0, :].astype(jnp.float32), cache

@@ -1,0 +1,201 @@
+"""Shared layer primitives: RMSNorm, RoPE, GQA attention, gated MLPs.
+
+Pure functions over parameter dicts; everything takes/returns bf16 activations
+with fp32 accumulation where it matters.  Attention supports full-causal,
+sliding-window, non-causal (encoder) and cross-attention masks plus
+single-token decode against a KV cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from math import sqrt as np_sqrt
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jax.Array]
+
+ACT_DTYPE = jnp.bfloat16
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding; x: (..., S, H, Dh), positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(
+        -jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (...,S,half)
+    cos = jnp.cos(angles)[..., None, :]   # (...,S,1,half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _attn_mask(q_pos: jax.Array, k_pos: jax.Array, causal: bool,
+               window: Optional[int]) -> jax.Array:
+    """(..., Sq, Sk) boolean mask: True = attend."""
+    diff = q_pos[..., :, None] - k_pos[..., None, :]
+    mask = jnp.ones(diff.shape, dtype=bool)
+    if causal:
+        mask &= diff >= 0
+    if window is not None:
+        mask &= diff < window
+    return mask
+
+
+def attention(
+    q: jax.Array,               # (B, Sq, Hq, Dh)
+    k: jax.Array,               # (B, Sk, Hkv, Dh)
+    v: jax.Array,               # (B, Sk, Hkv, Dh)
+    q_pos: jax.Array,           # (B, Sq)
+    k_pos: jax.Array,           # (B, Sk)
+    causal: bool = True,
+    window: Optional[int] = None,
+    kv_valid: Optional[jax.Array] = None,   # (B, Sk) for ragged caches
+) -> jax.Array:
+    """GQA scaled-dot-product attention, fp32 softmax.
+
+    Long sequences route through :func:`chunked_attention` (online softmax)
+    so the (Sq, Sk) score matrix never materializes.
+    """
+    b, sq, hq, dh = q.shape
+    if sq > CHUNK_THRESHOLD:   # decode (sq=1) stays dense: (1, Sk) is cheap
+        return chunked_attention(q, k, v, q_pos, k_pos, causal=causal,
+                                 window=window, kv_valid=kv_valid)
+    hkv = k.shape[2]
+    group = hq // hkv
+    # keep operands in bf16, accumulate in fp32 on the MXU — casting K/V to
+    # fp32 doubles HBM traffic (catastrophic for 32k decode caches)
+    scale = (1.0 / np_sqrt(dh))
+    qs = (q * jnp.asarray(scale, q.dtype)).reshape(b, sq, hkv, group, dh)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qs, k,
+                        preferred_element_type=jnp.float32)
+    mask = _attn_mask(q_pos, k_pos, causal, window)        # (B, Sq, Sk)
+    if kv_valid is not None:
+        mask &= kv_valid[:, None, :]
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(q.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, hq, dh).astype(q.dtype)
+
+
+CHUNK_THRESHOLD = 4096   # chunked (online-softmax) attention above this seq len
+Q_CHUNK = 1024
+K_CHUNK = 1024
+
+
+def chunked_attention(
+    q: jax.Array,               # (B, Sq, Hq, Dh)
+    k: jax.Array,               # (B, Sk, Hkv, Dh)
+    v: jax.Array,
+    q_pos: jax.Array,           # (B, Sq)
+    k_pos: jax.Array,           # (B, Sk)
+    causal: bool = True,
+    window: Optional[int] = None,
+    kv_valid: Optional[jax.Array] = None,
+    q_chunk: int = Q_CHUNK,
+    k_chunk: int = K_CHUNK,
+) -> jax.Array:
+    """Flash-attention-style streaming softmax: O(Cq*Ck) working set.
+
+    The full (Sq, Sk) score matrix never materializes — this is what makes
+    prefill_32k fit in HBM (the naive path would need TBs of temps).  Same
+    numerics as :func:`attention` up to fp32 accumulation order.
+    """
+    b, sq, hq, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    nq = -(-sq // q_chunk)
+    nk = -(-sk // k_chunk)
+    pq, pk = nq * q_chunk - sq, nk * k_chunk - sk
+    # operands stay bf16 (fp32 casts double the streaming traffic); the
+    # score einsum accumulates in fp32 via preferred_element_type
+    qf = q * jnp.asarray(1.0 / np_sqrt(dh), q.dtype)
+    qf = jnp.pad(qf, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kf = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vf = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    qp = jnp.pad(q_pos, ((0, 0), (0, pq)), constant_values=-1)
+    kp = jnp.pad(k_pos, ((0, 0), (0, pk)), constant_values=2**30)
+    kval = kv_valid if kv_valid is not None else jnp.ones((b, sk), bool)
+    kval = jnp.pad(kval, ((0, 0), (0, pk)), constant_values=False)
+
+    qf = qf.reshape(b, nq, q_chunk, hkv, g, dh)
+    kf = kf.reshape(b, nk, k_chunk, hkv, dh)
+    vf = vf.reshape(b, nk, k_chunk, hkv, dh)
+    qp = qp.reshape(b, nq, q_chunk)
+    kp = kp.reshape(b, nk, k_chunk)
+    kval = kval.reshape(b, nk, k_chunk)
+
+    # All q-blocks advance TOGETHER through one scan over kv chunks: the
+    # q-block dim (n) is a batch dim, so it stays shardable (sequence
+    # parallelism reshapes (S) -> (n, Cq) cleanly); a lax.map over q-blocks
+    # would serialize them and force seq to be replicated (measured 16x
+    # memory-term inflation on head-indivisible archs at prefill_32k).
+    def kv_step(carry, inputs):
+        m, l, acc = carry                         # (B,N,Hkv,G,Cq[,Dh])
+        kc, vc, kpc, kvc = inputs                 # (B,Ck,Hkv,Dh), (B,Ck)..
+        s = jnp.einsum("bnqhgd,bkhd->bnhgqk", qf, kc,
+                       preferred_element_type=jnp.float32)
+        diff = qp[:, :, :, None] - kpc[:, None, None, :]  # (B,N,Cq,Ck)
+        mask = jnp.ones(diff.shape, bool)
+        if causal:
+            mask &= diff >= 0
+        if window is not None:
+            mask &= diff < window
+        mask &= kvc[:, None, None, :]
+        s = jnp.where(mask[:, :, None, None, :, :], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bnhgqk,bkhd->bnhgqd", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    qf = qf.transpose(0, 1, 3, 4, 2, 5)           # (B,N,Hkv,G,Cq,Dh)
+    qf = qf.transpose(0, 1, 4, 2, 3, 5)           # (B,N,Cq,Hkv,G,Dh)
+    m0 = jnp.full((b, nq, hkv, g, q_chunk), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, nq, hkv, g, q_chunk), jnp.float32)
+    a0 = jnp.zeros((b, nq, hkv, g, q_chunk, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        kv_step, (m0, l0, a0),
+        (kf.swapaxes(0, 1), vf.swapaxes(0, 1),
+         kp.swapaxes(0, 1), kval.swapaxes(0, 1)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    outs = jnp.einsum("bnhgqd->bnqhgd", out)
+    outs = outs.reshape(b, nq * q_chunk, hq, dh)
+    return outs[:, :sq].astype(q.dtype)
+
+
+def gated_mlp(x: jax.Array, p: Params, kind: str) -> jax.Array:
+    """SwiGLU / GeGLU feed-forward."""
+    gate = x @ p["w_gate"]
+    up = x @ p["w_up"]
+    if kind == "geglu":
+        act = jax.nn.gelu(gate.astype(jnp.float32), approximate=True)
+    else:
+        act = jax.nn.silu(gate.astype(jnp.float32))
+    return ((act * up.astype(jnp.float32)).astype(x.dtype)) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# parameter initializers (shape builders double as eval_shape specs)
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, scale: Optional[float] = None,
+               dtype=jnp.bfloat16) -> jax.Array:
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(shape[0])
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)

@@ -1,0 +1,341 @@
+"""The composable LM: one builder for all 10 assigned architectures.
+
+Layer stacking: ``num_layers`` is split into *cycles* of ``block_pattern``
+(plus an unrolled tail if not divisible).  Per-cycle parameters are stacked
+along a leading axis and processed with ``lax.scan`` — compile time stays
+O(pattern), not O(layers), which matters at 94 layers on a 512-chip mesh.
+
+Three entry points:
+  forward(params, batch)            full-sequence logits (train / eval)
+  prefill(params, batch)            full sequence -> (last logits, cache)
+  decode_step(params, cache, token) one token with cache (serving)
+
+Caches are O(S) ring buffers for attention kinds (bounded by ``window`` for
+SWA/local — the reason h2o-danube / recurrentgemma / xlstm run long_500k)
+and O(1) recurrent states for RG-LRU / xLSTM kinds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import recurrent as rec
+from repro.models.config import ArchConfig
+from repro.models.layers import (
+    ACT_DTYPE,
+    attention,
+    dense_init,
+    gated_mlp,
+    rmsnorm,
+    rope,
+)
+from repro.models.moe import init_moe, moe_ffn, moe_ffn_shard_map
+
+P = Dict[str, Any]
+
+
+def shard(x, spec):
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+@dataclasses.dataclass
+class ActSharding:
+    """Optional activation sharding constraints (None = unconstrained)."""
+
+    hidden: Any = None        # (B, S, D)
+    heads: Any = None         # (B, S, H, Dh)
+    kv: Any = None            # (B, S, Hkv, Dh) — attention-side K/V layout
+                              # (pins propagation from Dh-sharded caches)
+    ffn: Any = None           # (B, S, F)
+    expert: Any = None        # (E, C, D)
+    logits: Any = None        # (B, S, V)
+    # explicit-EP path: when a mesh is provided, MoE layers run through
+    # shard_map + all_to_all instead of relying on SPMD propagation
+    moe_mesh: Any = None
+    moe_dp_axes: Any = ()
+
+
+# ---------------------------------------------------------------------------
+# parameter construction
+# ---------------------------------------------------------------------------
+
+def _init_attn(key, cfg: ArchConfig) -> P:
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (cfg.d_model, cfg.q_dim)),
+        "wk": dense_init(ks[1], (cfg.d_model, cfg.kv_dim)),
+        "wv": dense_init(ks[2], (cfg.d_model, cfg.kv_dim)),
+        "wo": dense_init(ks[3], (cfg.q_dim, cfg.d_model)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), ACT_DTYPE)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), ACT_DTYPE)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), ACT_DTYPE)
+    return p
+
+
+def _init_ffn(key, cfg: ArchConfig) -> P:
+    if cfg.moe is not None:
+        return init_moe(key, cfg.d_model, cfg.moe)
+    if cfg.mlp == "none" or cfg.d_ff == 0:
+        return {}
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (cfg.d_model, cfg.d_ff)),
+        "w_up": dense_init(ks[1], (cfg.d_model, cfg.d_ff)),
+        "w_down": dense_init(ks[2], (cfg.d_ff, cfg.d_model)),
+    }
+
+
+def _init_layer(key, kind: str, cfg: ArchConfig) -> P:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: P = {"norm1": jnp.zeros((cfg.d_model,), jnp.float32)}
+    if kind in ("attn", "swa"):
+        p["attn"] = _init_attn(k1, cfg)
+    elif kind == "rglru":
+        p["rglru"] = rec.init_rglru(k1, cfg.d_model)
+    elif kind == "mlstm":
+        p["mlstm"] = rec.init_mlstm(k1, cfg.d_model, max(cfg.num_heads, 1))
+    elif kind == "slstm":
+        p["slstm"] = rec.init_slstm(k1, cfg.d_model)
+    ffn = _init_ffn(k2, cfg)
+    if ffn:
+        p["norm2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p["ffn"] = ffn
+    return p
+
+
+def _init_xlayer(key, cfg: ArchConfig) -> P:
+    """Decoder layer with cross-attention (enc-dec archs)."""
+    p = _init_layer(key, "attn", cfg)
+    k1, k2 = jax.random.split(jax.random.fold_in(key, 7), 2)
+    p["norm_x"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    p["xattn"] = _init_attn(k1, cfg)
+    return p
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> P:
+    pat = cfg.block_pattern
+    n_cycles, tail = divmod(cfg.num_layers, len(pat))
+    keys = jax.random.split(key, 8)
+
+    def cycle(i):
+        ck = jax.random.fold_in(keys[0], i)
+        out = {}
+        for j, kind in enumerate(pat):
+            lk = jax.random.fold_in(ck, j)
+            if cfg.encoder is not None and kind == "attn":
+                out[f"s{j}_{kind}"] = _init_xlayer(lk, cfg)
+            else:
+                out[f"s{j}_{kind}"] = _init_layer(lk, kind, cfg)
+        return out
+
+    cycles = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *[cycle(i) for i in range(n_cycles)]
+    ) if n_cycles else {}
+
+    params: P = {
+        "embed": dense_init(keys[1], (cfg.vocab_size, cfg.d_model),
+                            scale=0.02),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        "cycles": cycles,
+    }
+    for t in range(tail):
+        params[f"tail_{t}"] = _init_layer(
+            jax.random.fold_in(keys[2], t), pat[t], cfg)
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(keys[3], (cfg.d_model, cfg.vocab_size),
+                                    scale=0.02)
+    if cfg.frontend == "patch":
+        params["patch_proj"] = dense_init(
+            keys[4], (cfg.d_model, cfg.d_model))
+    if cfg.encoder is not None:
+        enc = {}
+        ek = keys[5]
+        enc_layers = [
+            _init_layer(jax.random.fold_in(ek, i), "attn", cfg)
+            for i in range(cfg.encoder.num_layers)
+        ]
+        enc["layers"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *enc_layers)
+        enc["final_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        params["encoder"] = enc
+    return params
+
+
+def abstract_params(cfg: ArchConfig) -> P:
+    """ShapeDtypeStruct tree (no allocation) — dry-run / sharding planning."""
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ---------------------------------------------------------------------------
+# forward pieces
+# ---------------------------------------------------------------------------
+
+def _attn_apply(p: P, cfg: ArchConfig, x, positions, kind: str,
+                sh: ActSharding, causal=True, kv=None, kv_pos=None,
+                kv_valid=None):
+    """Full-sequence attention (self or cross when kv given)."""
+    b, s, d = x.shape
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(b, s, cfg.num_heads, cfg.head_dim)
+    if kv is None:
+        k = x @ p["wk"]
+        v = x @ p["wv"]
+        if "bk" in p:
+            k, v = k + p["bk"], v + p["bv"]
+        k = k.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+        v = v.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+        k_pos = positions
+    else:
+        src, k_pos = kv, kv_pos
+        sk = src.shape[1]
+        k = (src @ p["wk"]).reshape(b, sk, cfg.num_kv_heads, cfg.head_dim)
+        v = (src @ p["wv"]).reshape(b, sk, cfg.num_kv_heads, cfg.head_dim)
+    q = shard(q, sh.heads)
+    k = rope(k, k_pos, cfg.rope_theta) if kv is None else k
+    q = rope(q, positions, cfg.rope_theta) if kv is None else q
+    window = cfg.window if kind == "swa" else None
+    if cfg.force_chunked_attn and q.shape[1] > 1 and kv is None:
+        from repro.models.layers import chunked_attention
+        out = chunked_attention(q, k, v, positions, k_pos, causal=causal,
+                                window=window, kv_valid=kv_valid)
+    else:
+        out = attention(q, k, v, positions, k_pos,
+                        causal=causal and kv is None,
+                        window=window, kv_valid=kv_valid)
+    out = shard(out, sh.heads)
+    return out.reshape(b, s, cfg.q_dim) @ p["wo"]
+
+
+def _ffn_apply(p: P, cfg: ArchConfig, x, sh: ActSharding):
+    if "ffn" not in p:
+        return None
+    h = rmsnorm(x, p["norm2"])
+    if cfg.moe is not None:
+        b, s, d = h.shape
+        x2 = h.reshape(b * s, d)
+        mesh = sh.moe_mesh
+        if mesh is not None:
+            shards = mesh.shape["model"]
+            for a in sh.moe_dp_axes:
+                shards *= mesh.shape[a]
+            if (b * s) % shards == 0 and (b * s) // shards >= 1:
+                out = moe_ffn_shard_map(x2, p["ffn"], cfg.moe, mesh,
+                                        tuple(sh.moe_dp_axes))
+                return out.reshape(b, s, d)
+        out = moe_ffn(x2, p["ffn"], cfg.moe, expert_sharding=sh.expert)
+        return out.reshape(b, s, d)
+    out = gated_mlp(h, p["ffn"], cfg.mlp)
+    return out
+
+
+def _layer_seq(p: P, kind: str, cfg: ArchConfig, x, positions,
+               sh: ActSharding, enc_out=None, enc_pos=None):
+    """One block, full sequence.  Returns (x, recurrent_last_state|None)."""
+    h = rmsnorm(x, p["norm1"])
+    state = None
+    if kind in ("attn", "swa"):
+        mixed = _attn_apply(p["attn"], cfg, h, positions, kind, sh)
+    elif kind == "rglru":
+        mixed, state = rec.rglru_seq(p["rglru"], h)
+    elif kind == "mlstm":
+        mixed, state = rec.mlstm_seq(p["mlstm"], h, max(cfg.num_heads, 1))
+    elif kind == "slstm":
+        mixed, state = rec.slstm_seq(p["slstm"], h)
+    else:
+        raise ValueError(kind)
+    x = x + mixed
+    if "xattn" in p:  # cross-attention (decoder of enc-dec)
+        hx = rmsnorm(x, p["norm_x"])
+        x = x + _attn_apply(p["xattn"], cfg, hx, positions, "attn", sh,
+                            kv=enc_out, kv_pos=enc_pos)
+    ffn = _ffn_apply(p, cfg, x, sh)
+    if ffn is not None:
+        x = shard(x + ffn, sh.hidden)
+    return x, state
+
+
+def _embed(params: P, cfg: ArchConfig, batch: Dict[str, jax.Array],
+           sh: ActSharding):
+    """Token (+frontend) embedding -> (x, positions, loss_offset)."""
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(ACT_DTYPE)
+    if cfg.family in ("dense", "moe", "vlm", "hybrid", "ssm") and \
+            cfg.frontend == "patch" and "embeds" in batch:
+        pe = batch["embeds"].astype(ACT_DTYPE) @ params["patch_proj"]
+        x = jnp.concatenate([pe, x], axis=1)
+    scale = jnp.sqrt(jnp.float32(cfg.d_model)).astype(ACT_DTYPE)
+    if cfg.family in ("dense", "hybrid") and cfg.name.startswith(
+            ("gemma", "recurrentgemma")):
+        x = x * scale
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    return shard(x, sh.hidden), positions
+
+
+def _encode(params: P, cfg: ArchConfig, frames: jax.Array, sh: ActSharding):
+    """Encoder stack over precomputed frame embeddings (audio stub)."""
+    x = frames.astype(ACT_DTYPE)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(x, lp):
+        h = rmsnorm(x, lp["norm1"])
+        x = x + _attn_apply(lp["attn"], cfg, h, positions, "attn", sh,
+                            causal=False)
+        ffn = _ffn_apply(lp, cfg, x, sh)
+        if ffn is not None:
+            x = x + ffn
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"]["layers"])
+    return rmsnorm(x, params["encoder"]["final_norm"]), positions
+
+
+def forward(params: P, cfg: ArchConfig, batch: Dict[str, jax.Array],
+            sh: Optional[ActSharding] = None,
+            remat: bool = False) -> jax.Array:
+    """Full-sequence logits (training / prefill-style evaluation)."""
+    sh = sh or ActSharding()
+    x, positions = _embed(params, cfg, batch, sh)
+    enc_out = enc_pos = None
+    if cfg.encoder is not None:
+        enc_out, enc_pos = _encode(params, cfg, batch["frames"], sh)
+
+    pat = cfg.block_pattern
+
+    def cycle_body(x, cp):
+        for j, kind in enumerate(pat):
+            x, _ = _layer_seq(cp[f"s{j}_{kind}"], kind, cfg, x, positions,
+                              sh, enc_out, enc_pos)
+        return x, None
+
+    body = cycle_body
+    if remat:
+        body = jax.checkpoint(
+            cycle_body, policy=jax.checkpoint_policies.nothing_saveable)
+    if params["cycles"]:
+        x, _ = jax.lax.scan(body, x, params["cycles"])
+    t = 0
+    while f"tail_{t}" in params:
+        x, _ = _layer_seq(params[f"tail_{t}"], pat[t], cfg, x, positions,
+                          sh, enc_out, enc_pos)
+        t += 1
+
+    x = rmsnorm(x, params["final_norm"])
+    head = params.get("head")
+    if head is None:
+        logits = x @ params["embed"].T.astype(x.dtype)
+    else:
+        logits = x @ head
+    return shard(logits.astype(jnp.float32), sh.logits)

@@ -1,0 +1,222 @@
+"""Recurrent mixers: RG-LRU (RecurrentGemma) and xLSTM (mLSTM / sLSTM).
+
+Sequence processing uses ``lax.associative_scan`` for the linear RG-LRU
+recurrence (log-depth on TPU) and ``lax.scan`` for the nonlinear LSTM
+recurrences.  Every mixer also exposes a single-step form for decode, with
+an O(1)-size carried state — this is what makes the ``long_500k`` cell
+feasible for these architectures.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+CONV_WIDTH = 4
+C_RGLRU = 8.0
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU block (Griffin / RecurrentGemma)
+# ---------------------------------------------------------------------------
+
+def init_rglru(key, d: int) -> Dict[str, jax.Array]:
+    ks = jax.random.split(key, 7)
+    return {
+        "w_x": dense_init(ks[0], (d, d)),
+        "w_y": dense_init(ks[1], (d, d)),
+        "w_out": dense_init(ks[2], (d, d)),
+        "conv_w": dense_init(ks[3], (CONV_WIDTH, d), scale=0.5),
+        "w_input_gate": dense_init(ks[4], (d, d)),
+        "w_rec_gate": dense_init(ks[5], (d, d)),
+        "lam": (jax.random.uniform(ks[6], (d,), jnp.float32, 1.0, 8.0)),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv, width CONV_WIDTH.  x: (B,S,D), w: (W,D)."""
+    pads = [(0, 0), (CONV_WIDTH - 1, 0), (0, 0)]
+    xp = jnp.pad(x, pads)
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(CONV_WIDTH):
+        out = out + xp[:, i: i + x.shape[1], :].astype(jnp.float32) \
+            * w[i].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _rglru_coeffs(p, xc: jax.Array):
+    """Per-step decay a_t and input b_t of h_t = a_t h_{t-1} + b_t."""
+    rg = jax.nn.sigmoid((xc @ p["w_rec_gate"]).astype(jnp.float32))
+    ig = jax.nn.sigmoid((xc @ p["w_input_gate"]).astype(jnp.float32))
+    log_a = -C_RGLRU * rg * jax.nn.softplus(p["lam"])
+    a = jnp.exp(log_a)
+    gated_x = xc.astype(jnp.float32) * ig
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * gated_x
+    return a, b
+
+
+def rglru_seq(p: Dict, x: jax.Array,
+              h0: jax.Array | None = None) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence RG-LRU block.  x: (B,S,D) -> (out, h_last)."""
+    y = jax.nn.gelu((x @ p["w_y"]).astype(jnp.float32), approximate=True)
+    xb = x @ p["w_x"]
+    xc = _causal_conv(xb, p["conv_w"])
+    a, b = _rglru_coeffs(p, xc)
+    if h0 is not None:
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    out = (h * y).astype(x.dtype) @ p["w_out"]
+    return out, h[:, -1, :]
+
+
+def rglru_step(p: Dict, x: jax.Array, h: jax.Array,
+               conv_state: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step.  x: (B,D); h: (B,D) fp32; conv_state: (B,W-1,D)."""
+    y = jax.nn.gelu((x @ p["w_y"]).astype(jnp.float32), approximate=True)
+    xb = x @ p["w_x"]
+    window = jnp.concatenate([conv_state, xb[:, None, :]], axis=1)  # (B,W,D)
+    xc = jnp.einsum("bwd,wd->bd", window.astype(jnp.float32),
+                    p["conv_w"].astype(jnp.float32)).astype(x.dtype)
+    a, b = _rglru_coeffs(p, xc)
+    h_new = a * h + b
+    out = (h_new * y).astype(x.dtype) @ p["w_out"]
+    return out, h_new, window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix-memory LSTM, xLSTM)
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, d: int, num_heads: int) -> Dict[str, jax.Array]:
+    ks = jax.random.split(key, 6)
+    return {
+        "w_q": dense_init(ks[0], (d, d)),
+        "w_k": dense_init(ks[1], (d, d)),
+        "w_v": dense_init(ks[2], (d, d)),
+        "w_o": dense_init(ks[3], (d, d)),
+        "w_i": dense_init(ks[4], (d, num_heads), dtype=jnp.float32),
+        "w_f": dense_init(ks[5], (d, num_heads), dtype=jnp.float32),
+    }
+
+
+def _mlstm_qkv(p, x: jax.Array, h: int):
+    b = x.shape[0]
+    s = x.shape[1] if x.ndim == 3 else None
+    def split(u):
+        shape = (b, s, h, -1) if s is not None else (b, h, -1)
+        return u.reshape(shape)
+    q = split(x @ p["w_q"]).astype(jnp.float32)
+    k = split(x @ p["w_k"]).astype(jnp.float32)
+    v = split(x @ p["w_v"]).astype(jnp.float32)
+    i = (x.astype(jnp.float32) @ p["w_i"])       # (B,[S],H)
+    f = (x.astype(jnp.float32) @ p["w_f"])
+    return q, k, v, i, f
+
+
+def mlstm_seq(p: Dict, x: jax.Array, num_heads: int,
+              state0=None) -> Tuple[jax.Array, Tuple]:
+    """x: (B,S,D) -> (out, (C, n)).  C: (B,H,Dh,Dh), n: (B,H,Dh)."""
+    bsz, s, d = x.shape
+    dh = d // num_heads
+    q, k, v, i, f = _mlstm_qkv(p, x, num_heads)
+    k = k / jnp.sqrt(dh)
+    ig = jnp.exp(i - jax.nn.softplus(i))          # stabilized exp gate
+    fg = jax.nn.sigmoid(f)
+    if state0 is None:
+        c0 = jnp.zeros((bsz, num_heads, dh, dh), jnp.float32)
+        n0 = jnp.zeros((bsz, num_heads, dh), jnp.float32)
+    else:
+        c0, n0 = state0
+
+    def step(carry, t):
+        c, n = carry
+        kt, vt, qt = k[:, t], v[:, t], q[:, t]    # (B,H,Dh)
+        it, ft = ig[:, t, :, None], fg[:, t, :, None]
+        c = ft[..., None] * c + it[..., None] * (kt[..., :, None]
+                                                 * vt[..., None, :])
+        n = ft * n + it * kt
+        num = jnp.einsum("bhkv,bhk->bhv", c, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)), 1.0)
+        return (c, n), num / den[..., None]
+
+    (c_last, n_last), outs = jax.lax.scan(
+        step, (c0, n0), jnp.arange(s), unroll=1)
+    outs = jnp.moveaxis(outs, 0, 1).reshape(bsz, s, d)   # (B,S,D)
+    out = outs.astype(x.dtype) @ p["w_o"]
+    return out, (c_last, n_last)
+
+
+def mlstm_step(p: Dict, x: jax.Array, state, num_heads: int):
+    """One decode step.  x: (B,D)."""
+    bsz, d = x.shape
+    dh = d // num_heads
+    c, n = state
+    q, k, v, i, f = _mlstm_qkv(p, x, num_heads)
+    k = k / jnp.sqrt(dh)
+    ig = jnp.exp(i - jax.nn.softplus(i))[:, :, None]
+    fg = jax.nn.sigmoid(f)[:, :, None]
+    c = fg[..., None] * c + ig[..., None] * (k[..., :, None] * v[..., None, :])
+    n = fg * n + ig * k
+    num = jnp.einsum("bhkv,bhk->bhv", c, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), 1.0)
+    out = (num / den[..., None]).reshape(bsz, d).astype(x.dtype) @ p["w_o"]
+    return out, (c, n)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar-memory LSTM with stabilized exponential gating)
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, d: int) -> Dict[str, jax.Array]:
+    ks = jax.random.split(key, 5)
+    return {
+        "w_z": dense_init(ks[0], (d, d)),
+        "w_i": dense_init(ks[1], (d, d), dtype=jnp.float32),
+        "w_f": dense_init(ks[2], (d, d), dtype=jnp.float32),
+        "w_o_gate": dense_init(ks[3], (d, d), dtype=jnp.float32),
+        "w_out": dense_init(ks[4], (d, d)),
+    }
+
+
+def _slstm_cell(p, xt, state):
+    c, n, m = state
+    z = jnp.tanh((xt @ p["w_z"]).astype(jnp.float32))
+    i_t = (xt.astype(jnp.float32) @ p["w_i"])
+    f_t = (xt.astype(jnp.float32) @ p["w_f"])
+    o = jax.nn.sigmoid(xt.astype(jnp.float32) @ p["w_o_gate"])
+    m_new = jnp.maximum(f_t + m, i_t)             # log-space stabilizer
+    i_s = jnp.exp(i_t - m_new)
+    f_s = jnp.exp(f_t + m - m_new)
+    c = f_s * c + i_s * z
+    n = f_s * n + i_s
+    h = o * c / jnp.maximum(n, 1.0)
+    return h, (c, n, m_new)
+
+
+def slstm_seq(p: Dict, x: jax.Array, state0=None):
+    bsz, s, d = x.shape
+    if state0 is None:
+        z = jnp.zeros((bsz, d), jnp.float32)
+        state0 = (z, z, z)
+
+    def step(carry, t):
+        h, new = _slstm_cell(p, x[:, t], carry)
+        return new, h
+
+    last, hs = jax.lax.scan(step, state0, jnp.arange(s))
+    out = jnp.moveaxis(hs, 0, 1).astype(x.dtype) @ p["w_out"]
+    return out, last
+
+
+def slstm_step(p: Dict, x: jax.Array, state):
+    h, new = _slstm_cell(p, x, state)
+    return h.astype(x.dtype) @ p["w_out"], new

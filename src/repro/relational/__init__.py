@@ -1,0 +1,32 @@
+from repro.relational.table import Table, NULL_KEY
+from repro.relational.join import (
+    sort_merge_join,
+    left_outer_join,
+    join_count,
+    semi_join_mask,
+    composite_key,
+)
+from repro.relational.ops import (
+    filter_table,
+    project,
+    compact,
+    dedup,
+    concat,
+    count_distinct,
+)
+
+__all__ = [
+    "Table",
+    "NULL_KEY",
+    "sort_merge_join",
+    "left_outer_join",
+    "join_count",
+    "semi_join_mask",
+    "composite_key",
+    "filter_table",
+    "project",
+    "compact",
+    "dedup",
+    "concat",
+    "count_distinct",
+]

@@ -1,0 +1,243 @@
+"""Sort-merge joins with static output shapes.
+
+PostgreSQL (the paper's base system) evaluates every join with hash
+build/probe over disk pages.  On TPU, data-dependent pointer chasing is the
+wrong primitive; we instead evaluate every join as
+
+    sort(right keys)  ->  two-sided searchsorted(left keys)  ->
+    static-capacity pair expansion
+
+which maps onto the VPU (bitonic sorts, vectorized binary search) and keeps
+every shape static.  ``N``-to-``N`` joins are handled exactly: each left row
+expands into ``hi - lo`` output rows via a cumsum/searchsorted expansion.
+
+Outer-join semantics follow Theorem 4.3 of the paper: a left row with no
+match emits exactly one output row whose right side is *null*, signalled by
+an indicator column (never by sentinel data values).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.relational.table import NULL_KEY, Table
+
+NULL_KEY64 = np.int32(2**31 - 1)
+
+
+def composite_key(table: Table, cols: Sequence[str]) -> jax.Array:
+    """Null-aware int32 sort key for a single key column.
+
+    Invalid rows map to ``NULL_KEY64`` (int32 max) so they sort last and never
+    match a valid key (valid ids must be < 2**31-1).  Joins with multiple
+    equality conditions sort/search on the *first* condition and apply the
+    remaining conditions as exact post-filters — single-column equijoins are
+    the common case in graph-model workloads, and this keeps all keys in
+    int32 (JAX's default-x64-off world) without lossy packing.
+    """
+    if len(cols) != 1:
+        raise ValueError(f"composite_key takes exactly 1 column, got {cols}")
+    k = table[cols[0]].astype(jnp.int32)
+    return jnp.where(table.valid, k, NULL_KEY64)
+
+
+def _expansion(counts: jax.Array, capacity: int):
+    """Map output slots [0, capacity) to (source row, within-row rank).
+
+    Given per-left-row output counts, returns (row, rank, valid) for each
+    output slot.  Output is prefix-compacted: slot j is valid iff j < total.
+    """
+    cum = jnp.cumsum(counts)                     # inclusive
+    total = cum[-1] if counts.shape[0] else jnp.int32(0)
+    slots = jnp.arange(capacity, dtype=counts.dtype)
+    row = jnp.searchsorted(cum, slots, side="right")
+    row = jnp.clip(row, 0, counts.shape[0] - 1)
+    start = cum[row] - counts[row]               # exclusive offset of row
+    rank = slots - start
+    valid = slots < total
+    return row, rank, valid, total
+
+
+@functools.partial(jax.jit, static_argnames=("on_left", "on_right"))
+def join_count(
+    left: Table,
+    right: Table,
+    on_left: Tuple[str, ...],
+    on_right: Tuple[str, ...],
+) -> jax.Array:
+    """Exact inner-join output cardinality (first <=2 key columns)."""
+    lk = composite_key(left, on_left)
+    rk = composite_key(right, on_right)
+    rk_sorted = jnp.sort(rk)
+    lo = jnp.searchsorted(rk_sorted, lk, side="left")
+    hi = jnp.searchsorted(rk_sorted, lk, side="right")
+    counts = jnp.where(left.valid & (lk != NULL_KEY64), hi - lo, 0)
+    return jnp.sum(counts)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("on_left", "on_right", "how", "capacity", "indicator"),
+)
+def _join_impl(
+    left: Table,
+    right: Table,
+    on_left: Tuple[str, ...],
+    on_right: Tuple[str, ...],
+    how: str,
+    capacity: int,
+    indicator: Optional[str],
+) -> Table:
+    lk = composite_key(left, on_left)
+    rk = composite_key(right, on_right)
+    order = jnp.argsort(rk)
+    rk_sorted = rk[order]
+    lo = jnp.searchsorted(rk_sorted, lk, side="left")
+    hi = jnp.searchsorted(rk_sorted, lk, side="right")
+    match_counts = jnp.where(left.valid & (lk != NULL_KEY64), hi - lo, 0)
+    if how == "inner":
+        counts = match_counts
+    elif how == "left_outer":
+        counts = jnp.where(left.valid, jnp.maximum(match_counts, 1), 0)
+    else:
+        raise ValueError(f"unknown join kind {how!r}")
+
+    row, rank, valid, _ = _expansion(counts, capacity)
+    matched = rank < match_counts[row]
+    rpos = jnp.clip(lo[row] + rank, 0, max(right.capacity - 1, 0))
+    ridx = order[rpos]
+
+    cols = {}
+    for name, col in left.columns.items():
+        cols[name] = col[row]
+    for name, col in right.columns.items():
+        if name in cols:
+            raise ValueError(f"column collision on {name!r}; prefix aliases first")
+        cols[name] = col[ridx]
+    out_valid = valid
+    if how == "left_outer":
+        ind = matched & valid
+        if indicator is not None:
+            cols[indicator] = ind
+    else:
+        out_valid = valid & matched  # matched is all-True for valid inner slots
+    return Table(columns=cols, valid=out_valid)
+
+
+def _round_capacity(n: int) -> int:
+    return max(8, int(1 << int(np.ceil(np.log2(max(n, 1) + 1)))))
+
+
+def sort_merge_join(
+    left: Table,
+    right: Table,
+    on: Sequence[Tuple[str, str]],
+    how: str = "inner",
+    capacity: Optional[int] = None,
+    indicator: Optional[str] = None,
+) -> Table:
+    """Join two tables on equality conditions ``[(lcol, rcol), ...]``.
+
+    The first two conditions form the sort key; any further conditions are
+    applied as an exact post-filter.  If ``capacity`` is None the exact
+    cardinality is computed first (two-phase execution, the eager ETL path);
+    pass a static ``capacity`` for fully-jitted / distributed execution.
+    """
+    on = list(on)
+    key_on, rest = on[:1], on[1:]
+    on_left = tuple(l for l, _ in key_on)
+    on_right = tuple(r for _, r in key_on)
+    if capacity is None:
+        n = int(join_count(left, right, on_left, on_right))
+        if how == "left_outer":
+            n += int(left.num_rows())  # upper bound incl. unmatched rows
+        capacity = _round_capacity(n)
+    out = _join_impl(left, right, on_left, on_right, how, capacity, indicator)
+    for lcol, rcol in rest:
+        keep = out[lcol] == out[rcol]
+        if how == "left_outer" and indicator is not None:
+            # extra predicates only constrain *matched* rows
+            out = out.with_columns(**{indicator: out[indicator] & keep})
+        else:
+            out = out.mask(keep)
+    return out
+
+
+def left_outer_join(
+    left: Table,
+    right: Table,
+    on: Sequence[Tuple[str, str]],
+    indicator: str,
+    capacity: Optional[int] = None,
+) -> Table:
+    """Exact left-outer join for any number of equality conditions.
+
+    With one condition this is :func:`sort_merge_join`'s native outer path.
+    With several, a first-key inner expansion + post-filter can leave an
+    unmatched left row represented by *multiple* indicator=False rows, which
+    would corrupt bag semantics of later chained outer joins (Thm 4.3 needs
+    exactly one null row per unmatched left row).  Here we instead take the
+    exact inner join and append exactly one null row per unmatched left row.
+    """
+    if len(on) == 1:
+        return sort_merge_join(
+            left, right, on, how="left_outer",
+            capacity=capacity, indicator=indicator,
+        )
+    rowid = "__rowid__"
+    lt = left.with_columns(**{rowid: jnp.arange(left.capacity, dtype=jnp.int32)})
+    inner = sort_merge_join(lt, right, on, how="inner", capacity=capacity)
+    # which left rows matched at least once?
+    hits = jnp.zeros((left.capacity,), dtype=jnp.int32)
+    hits = hits.at[inner[rowid]].add(inner.valid.astype(jnp.int32))
+    unmatched = left.valid & (hits == 0)
+
+    matched_part = inner.with_columns(
+        **{indicator: inner.valid}
+    )
+    null_right = {
+        name: jnp.zeros((left.capacity,), dtype=col.dtype)
+        for name, col in right.columns.items()
+    }
+    unmatched_part = Table(
+        columns={
+            **left.columns,
+            rowid: jnp.arange(left.capacity, dtype=jnp.int32),
+            **null_right,
+            indicator: jnp.zeros((left.capacity,), dtype=bool),
+        },
+        valid=unmatched,
+    )
+    names = matched_part.column_names()
+    cols = {
+        n: jnp.concatenate([matched_part[n], unmatched_part[n]]) for n in names
+    }
+    out = Table(
+        columns=cols,
+        valid=jnp.concatenate([matched_part.valid, unmatched_part.valid]),
+    )
+    return Table(
+        columns={k: v for k, v in out.columns.items() if k != rowid},
+        valid=out.valid,
+    )
+
+
+def semi_join_mask(
+    left: Table, right: Table, on: Sequence[Tuple[str, str]]
+) -> jax.Array:
+    """Boolean mask over left rows with >=1 match in right (for pruning).
+
+    Approximate (never false-negative) when more than one condition is given:
+    only the first condition is checked.
+    """
+    on = list(on)[:1]
+    lk = composite_key(left, tuple(l for l, _ in on))
+    rk = composite_key(right, tuple(r for _, r in on))
+    rk_sorted = jnp.sort(rk)
+    lo = jnp.searchsorted(rk_sorted, lk, side="left")
+    hi = jnp.searchsorted(rk_sorted, lk, side="right")
+    return left.valid & (lk != NULL_KEY64) & (hi > lo)

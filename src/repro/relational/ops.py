@@ -1,0 +1,86 @@
+"""Non-join relational operators: filter, project, dedup, compact, concat."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.relational.join import composite_key
+from repro.relational.table import Table
+
+_OPS = {
+    "==": lambda a, b: a == b,
+    "!=": lambda a, b: a != b,
+    "<": lambda a, b: a < b,
+    "<=": lambda a, b: a <= b,
+    ">": lambda a, b: a > b,
+    ">=": lambda a, b: a >= b,
+}
+
+
+def filter_table(table: Table, col: str, op: str, value) -> Table:
+    """sigma_{col op value}(table); mask-only, shape preserved."""
+    return table.mask(_OPS[op](table[col], value))
+
+
+def project(table: Table, names: Sequence[str]) -> Table:
+    return table.select(list(names))
+
+
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def compact(table: Table, capacity: Optional[int] = None) -> Table:
+    """Stable-move valid rows to the front (prefix layout).
+
+    Needed before fixed-capacity shard exchange (all_to_all) and before
+    slicing a table down to a smaller capacity.
+    """
+    cap = capacity or table.capacity
+    # stable argsort of (not valid) keeps relative order of valid rows
+    order = jnp.argsort(~table.valid, stable=True)
+    order = order[:cap]
+    cols = {k: v[order] for k, v in table.columns.items()}
+    valid = table.valid[order]
+    return Table(columns=cols, valid=valid)
+
+
+def dedup(table: Table, keys: Sequence[str]) -> Table:
+    """Keep one valid row per distinct key tuple (any number of key columns).
+
+    Lexicographic sort (invalid rows last) + neighbour comparison; rows come
+    back key-sorted with duplicates masked out.  No 64-bit packing needed.
+    """
+    keys = list(keys)
+    # lexsort: last key is the primary -> order (minor..major)
+    sort_keys = [table[k] for k in reversed(keys)] + [~table.valid]
+    order = jnp.lexsort(tuple(sort_keys))
+    sorted_valid = table.valid[order]
+    same = jnp.ones(table.capacity, dtype=bool)
+    for k in keys:
+        col = table[k][order]
+        eq = jnp.concatenate([jnp.array([False]), col[1:] == col[:-1]])
+        same = same & eq
+    prev_valid = jnp.concatenate([jnp.array([False]), sorted_valid[:-1]])
+    first = ~(same & prev_valid)
+    cols = {name: col[order] for name, col in table.columns.items()}
+    return Table(columns=cols, valid=sorted_valid & first)
+
+
+def concat(tables: Sequence[Table]) -> Table:
+    names = tables[0].column_names()
+    for t in tables[1:]:
+        if t.column_names() != names:
+            raise ValueError("concat requires identical schemas")
+    cols = {
+        n: jnp.concatenate([t[n] for t in tables]) for n in names
+    }
+    valid = jnp.concatenate([t.valid for t in tables])
+    return Table(columns=cols, valid=valid)
+
+
+def count_distinct(table: Table, col: str) -> int:
+    """Host-side distinct count of a key column (ANALYZE-style statistic)."""
+    vals = np.asarray(table[col])[np.asarray(table.valid)]
+    return int(np.unique(vals).size)

@@ -1,0 +1,155 @@
+"""Columnar, static-shape relational tables for JAX.
+
+A :class:`Table` is the TPU-native replacement for a row-store relation:
+every column is a dense 1-D array of identical static length (``capacity``),
+and a boolean ``valid`` mask carries the dynamic cardinality.  All relational
+operators in :mod:`repro.relational` preserve this invariant, which is what
+makes whole extraction plans jit-able and shardable with ``pjit``/``shard_map``.
+
+Conventions
+-----------
+* Key columns are ``int32`` (non-negative ids).  ``float32`` measure columns
+  are allowed but never joined on.
+* Invalid rows may hold arbitrary garbage; operators must mask through
+  ``valid`` and never rely on invalid slots being zeroed.
+* Join outputs are *prefix-compacted*: valid rows occupy slots ``[0, n)``.
+  Filter outputs are not; use :func:`repro.relational.ops.compact` if a
+  prefix layout is required (e.g. before an ``all_to_all`` repartition).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Mapping, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Sentinel used for invalid / null int32 keys.  Valid ids must be < NULL_KEY.
+NULL_KEY = np.int32(2**31 - 1)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Table:
+    """An immutable columnar relation with a validity mask.
+
+    Attributes:
+      columns: mapping column-name -> 1-D array, all of length ``capacity``.
+      valid:   bool array of length ``capacity``; True where the row is live.
+    """
+
+    columns: Dict[str, jax.Array]
+    valid: jax.Array
+
+    # -- pytree plumbing ----------------------------------------------------
+    def tree_flatten(self):
+        names = tuple(sorted(self.columns))
+        children = tuple(self.columns[n] for n in names) + (self.valid,)
+        return children, names
+
+    @classmethod
+    def tree_unflatten(cls, names, children):
+        *cols, valid = children
+        return cls(columns=dict(zip(names, cols)), valid=valid)
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def from_arrays(cls, capacity: int | None = None, **columns) -> "Table":
+        """Build a table from equal-length arrays, padding to ``capacity``."""
+        cols = {k: jnp.asarray(v) for k, v in columns.items()}
+        if not cols:
+            raise ValueError("Table needs at least one column")
+        n = len(next(iter(cols.values())))
+        for k, v in cols.items():
+            if v.ndim != 1 or len(v) != n:
+                raise ValueError(f"column {k!r} has shape {v.shape}, want ({n},)")
+        cap = n if capacity is None else capacity
+        if cap < n:
+            raise ValueError(f"capacity {cap} < data length {n}")
+        valid = jnp.arange(cap) < n
+        padded = {}
+        for k, v in cols.items():
+            pad = jnp.zeros((cap - n,), dtype=v.dtype)
+            padded[k] = jnp.concatenate([v, pad]) if cap > n else v
+        return cls(columns=padded, valid=valid)
+
+    @classmethod
+    def empty_like(cls, other: "Table", capacity: int) -> "Table":
+        cols = {
+            k: jnp.zeros((capacity,), dtype=v.dtype)
+            for k, v in other.columns.items()
+        }
+        return cls(columns=cols, valid=jnp.zeros((capacity,), dtype=bool))
+
+    # -- accessors ----------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return int(self.valid.shape[0])
+
+    def num_rows(self) -> jax.Array:
+        """Traced count of live rows."""
+        return jnp.sum(self.valid.astype(jnp.int32))
+
+    def __getitem__(self, name: str) -> jax.Array:
+        return self.columns[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.columns
+
+    def column_names(self) -> Tuple[str, ...]:
+        return tuple(sorted(self.columns))
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(sorted(self.columns))
+
+    # -- basic transforms (shape-preserving) ---------------------------------
+    def with_columns(self, **extra) -> "Table":
+        cols = dict(self.columns)
+        for k, v in extra.items():
+            v = jnp.asarray(v)
+            if v.shape != (self.capacity,):
+                raise ValueError(f"column {k!r} shape {v.shape} != ({self.capacity},)")
+            cols[k] = v
+        return Table(columns=cols, valid=self.valid)
+
+    def select(self, names) -> "Table":
+        return Table(
+            columns={n: self.columns[n] for n in names}, valid=self.valid
+        )
+
+    def rename(self, mapping: Mapping[str, str]) -> "Table":
+        cols = {mapping.get(k, k): v for k, v in self.columns.items()}
+        if len(cols) != len(self.columns):
+            raise ValueError(f"rename collision: {mapping}")
+        return Table(columns=cols, valid=self.valid)
+
+    def prefix(self, alias: str) -> "Table":
+        """Namespace every column as ``<alias>.<col>`` (query-alias scoping)."""
+        return self.rename({k: f"{alias}.{k}" for k in self.columns})
+
+    def mask(self, keep: jax.Array) -> "Table":
+        return Table(columns=self.columns, valid=self.valid & keep)
+
+    # -- host-side materialization (tests / debugging) -----------------------
+    def to_numpy(self) -> Dict[str, np.ndarray]:
+        """Return compacted host arrays containing only valid rows."""
+        valid = np.asarray(self.valid)
+        return {k: np.asarray(v)[valid] for k, v in self.columns.items()}
+
+    def to_rowset(self, names=None) -> set:
+        """Set of row tuples over ``names`` (default all columns), valid only.
+
+        Multisets are represented by appending a per-duplicate rank so tests
+        can compare join results exactly (bag semantics).
+        """
+        names = list(names) if names is not None else list(self.column_names())
+        data = self.to_numpy()
+        rows = list(zip(*(data[n].tolist() for n in names))) if names else []
+        seen: Dict[tuple, int] = {}
+        out = set()
+        for r in rows:
+            k = seen.get(r, 0)
+            seen[r] = k + 1
+            out.add(r + (k,))
+        return out

@@ -1,0 +1,130 @@
+"""Optimizers: AdamW (fp32 moments over bf16 params) and Adafactor-lite.
+
+Optimizer state lives in the same sharding as its parameter (FSDP: the
+moments shard with the weights, ZeRO-style), so memory per chip is
+params/N * (2 + 4 + 4) bytes for AdamW.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree_util.tree_map(zeros, params),
+            v=jax.tree_util.tree_map(zeros, params),
+        )
+
+    def update(self, grads, state: AdamWState, params
+               ) -> Tuple[Any, AdamWState]:
+        # global-norm clip
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree_util.tree_leaves(grads)))
+        scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+        step = state.step + 1
+        b1c = 1 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m_new = self.b1 * m + (1 - self.b1) * g
+            v_new = self.b2 * v + (1 - self.b2) * g * g
+            mhat = m_new / b1c
+            vhat = v_new / b2c
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if p.ndim >= 2:  # no decay on norms/biases
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            p_new = (p.astype(jnp.float32) - self.lr * delta).astype(p.dtype)
+            return p_new, m_new, v_new
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.m)
+        flat_v = treedef.flatten_up_to(state.v)
+        out = [upd(g, m, v, p)
+               for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, AdamWState(step=step, m=new_m, v=new_v)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorLite:
+    """Row/column-factored second moments: O(r+c) state per matrix.
+
+    The memory lever for the 235B config when AdamW does not fit: state is
+    ~1/1000th of AdamW's ``v`` for large matrices.
+    """
+
+    lr: float = 1e-3
+    decay: float = 0.99
+    eps: float = 1e-30
+    grad_clip: float = 1.0
+
+    def init(self, params):
+        def zeros(p):
+            if p.ndim >= 2:
+                return (jnp.zeros(p.shape[:-1], jnp.float32),
+                        jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32))
+            return (jnp.zeros(p.shape, jnp.float32),)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree_util.tree_map(zeros, params),
+            v=None,
+        )
+
+    def update(self, grads, state, params):
+        step = state.step + 1
+
+        def upd(g, fac, p):
+            g = g.astype(jnp.float32)
+            if p.ndim >= 2:
+                r, c = fac
+                r = self.decay * r + (1 - self.decay) * jnp.mean(
+                    g * g, axis=-1)
+                c = self.decay * c + (1 - self.decay) * jnp.mean(
+                    g * g, axis=-2)
+                denom = jnp.sqrt(
+                    r[..., :, None] * c[..., None, :]
+                    / jnp.maximum(jnp.mean(r, axis=-1, keepdims=True)
+                                  [..., None], self.eps))
+                upd_ = g / jnp.maximum(denom, 1e-9)
+                new_fac = (r, c)
+            else:
+                (v,) = fac
+                v = self.decay * v + (1 - self.decay) * g * g
+                upd_ = g / (jnp.sqrt(v) + 1e-9)
+                new_fac = (v,)
+            p_new = (p.astype(jnp.float32) - self.lr * upd_).astype(p.dtype)
+            return p_new, new_fac
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_f = treedef.flatten_up_to(state.m)
+        out = [upd(g, f, p) for g, f, p in zip(flat_g, flat_f, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_f = treedef.unflatten([o[1] for o in out])
+        return new_p, AdamWState(step=step, m=new_f, v=None)

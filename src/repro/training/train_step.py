@@ -1,0 +1,104 @@
+"""Training step: microbatch gradient accumulation + remat + chunked xent.
+
+Memory discipline for the big configs (e.g. qwen3-moe-235b on 256 chips):
+  * remat policy ``nothing_saveable`` per layer-cycle (activations recomputed
+    in backward; only cycle boundaries persist),
+  * ``lax.scan`` over microbatches (gradients accumulate in fp32; the
+    activation working set is one microbatch),
+  * cross-entropy computed in sequence chunks so the fp32 (B, S, 151936)
+    logits tensor never materializes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.model import ActSharding, forward
+from repro.training.optim import AdamW
+
+XENT_CHUNK = 512
+
+
+def _chunked_xent(params, cfg: ArchConfig, batch, sh, remat: bool,
+                  chunk: int = XENT_CHUNK) -> jax.Array:
+    """Mean next-token loss without materializing full fp32 logits."""
+    logits = forward(params, cfg, batch, sh=sh, remat=remat)
+    labels = batch["labels"]
+    s_tok = labels.shape[1]
+    logits = logits[:, -s_tok:, :]  # frontends prepend positions
+
+    def chunk_loss(args):
+        lg, lb = args
+        logp = jax.nn.log_softmax(lg.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, lb[..., None], axis=-1)[..., 0]
+        return jnp.sum(nll)
+
+    n_chunks = max(1, s_tok // chunk)
+    c = s_tok // n_chunks
+    lg = logits[:, : n_chunks * c].reshape(
+        logits.shape[0], n_chunks, c, -1).swapaxes(0, 1)
+    lb = labels[:, : n_chunks * c].reshape(
+        labels.shape[0], n_chunks, c).swapaxes(0, 1)
+    total = jnp.sum(jax.lax.map(chunk_loss, (lg, lb)))
+    rem = s_tok - n_chunks * c
+    if rem:
+        total = total + chunk_loss(
+            (logits[:, -rem:], labels[:, -rem:]))
+    return total / (labels.shape[0] * s_tok)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    microbatches: int = 1
+    remat: bool = True
+    accum_dtype: Any = jnp.float32
+
+
+def make_train_step(cfg: ArchConfig, opt: AdamW,
+                    ts: TrainStepConfig = TrainStepConfig(),
+                    sh: Optional[ActSharding] = None):
+    """Returns train_step(params, opt_state, batch) -> (params, state, metrics).
+
+    ``batch`` leaves have leading dim = global batch; with microbatching the
+    step scans over ``microbatches`` slices, accumulating fp32 gradients.
+    """
+    sh = sh or ActSharding()
+
+    def loss_fn(params, mb):
+        return _chunked_xent(params, cfg, mb, sh, ts.remat)
+
+    def train_step(params, opt_state, batch):
+        n_mb = ts.microbatches
+        if n_mb == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def slice_mb(x, i):
+                mb = x.shape[0] // n_mb
+                return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+            def mb_step(carry, i):
+                acc, loss_acc = carry
+                mb = jax.tree_util.tree_map(
+                    functools.partial(slice_mb, i=i), batch)
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(ts.accum_dtype), acc, grads)
+                return (acc, loss_acc + loss), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, ts.accum_dtype), params)
+            (grads, loss_sum), _ = jax.lax.scan(
+                mb_step, (zeros, jnp.zeros((), jnp.float32)),
+                jnp.arange(n_mb))
+            grads = jax.tree_util.tree_map(lambda g: g / n_mb, grads)
+            loss = loss_sum / n_mb
+        new_params, new_state = opt.update(grads, opt_state, params)
+        metrics = {"loss": loss, "step": new_state.step}
+        return new_params, new_state, metrics
+
+    return train_step

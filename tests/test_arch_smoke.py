@@ -1,0 +1,135 @@
+"""Per-architecture smoke tests: reduced config, one forward + train-ish step
++ prefill/decode consistency, all on CPU.  Asserts shapes and no NaNs."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import (
+    SHAPES,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    prefill,
+)
+
+B, S = 2, 16
+
+
+def _batch(cfg, rng):
+    batch = {
+        "tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32)),
+        "labels": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32)),
+    }
+    if cfg.frontend == "patch":
+        batch["embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.frontend_len, cfg.d_model))
+            .astype(np.float32))
+    if cfg.frontend == "frames":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.frontend_len, cfg.d_model))
+            .astype(np.float32))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_smoke_config(arch)
+    rng = np.random.default_rng(42)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, rng)
+    logits = jax.jit(lambda p, b: forward(p, cfg, b))(params, batch)
+    extra = cfg.frontend_len if cfg.frontend == "patch" else 0
+    assert logits.shape == (B, S + extra, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_gradient_step_finite(arch):
+    cfg = get_smoke_config(arch)
+    rng = np.random.default_rng(7)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    batch = _batch(cfg, rng)
+
+    def loss_fn(p):
+        logits = forward(p, cfg, batch)
+        logits = logits[:, -S:, :]  # token positions only (vlm prepends)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(
+            logp, batch["labels"][..., None], axis=-1)
+        return jnp.mean(nll)
+
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert bool(jnp.isfinite(loss)), f"{arch}: NaN loss"
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in flat), f"{arch}: NaN grad"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_consistency(arch):
+    """decode_step after prefill(S-1 tokens) == forward logits at last pos."""
+    cfg = get_smoke_config(arch)
+    rng = np.random.default_rng(3)
+    params = init_params(cfg, jax.random.PRNGKey(2))
+    batch = _batch(cfg, rng)
+    full_logits = forward(params, cfg, batch)[:, -1, :]
+
+    prefix = {k: (v[:, :-1] if k in ("tokens", "labels") else v)
+              for k, v in batch.items()}
+    _, cache = prefill(params, cfg, prefix, max_len=S + 8)
+    step_logits, _ = decode_step(params, cfg, cache, batch["tokens"][:, -1])
+    np.testing.assert_allclose(
+        np.asarray(step_logits), np.asarray(full_logits),
+        rtol=0.15, atol=0.15,
+    )
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_params_match_spec(arch):
+    """The FULL config matches its assigned hyperparameters exactly."""
+    cfg = get_config(arch)
+    spec = {
+        "gemma-2b": (18, 2048, 8, 1, 16384, 256000),
+        "qwen2.5-3b": (36, 2048, 16, 2, 11008, 151936),
+        "llama3.2-3b": (28, 3072, 24, 8, 8192, 128256),
+        "h2o-danube-3-4b": (24, 3840, 32, 8, 10240, 32000),
+        "internvl2-1b": (24, 896, 14, 2, 4864, 151655),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+        "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == spec
+
+
+def test_decode_ring_buffer_matches_full_for_swa():
+    """SWA ring-buffer decode == full-cache decode within the window."""
+    cfg = get_smoke_config("h2o-danube-3-4b")
+    rng = np.random.default_rng(5)
+    params = init_params(cfg, jax.random.PRNGKey(9))
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 12)).astype(np.int32))
+    # run 12 tokens by decode only, max_len smaller than sequence
+    cache = init_cache(cfg, 1, max_len=64)
+    outs = []
+    for t in range(12):
+        logits, cache = decode_step(params, cfg, cache, toks[:, t])
+        outs.append(logits)
+    full = forward(params, cfg, {"tokens": toks})
+    np.testing.assert_allclose(
+        np.asarray(outs[-1][0]), np.asarray(full[0, -1]), rtol=0.15, atol=0.15)
+
+
+def test_moe_param_count_magnitude():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    n = cfg.n_params()
+    assert 180e9 < n < 300e9, f"qwen3 param count off: {n/1e9:.1f}B"
+    na = cfg.n_active_params()
+    assert 15e9 < na < 40e9, f"qwen3 active params off: {na/1e9:.1f}B"

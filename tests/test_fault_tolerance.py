@@ -1,0 +1,112 @@
+"""Fault tolerance: checkpoint/restart equivalence, elastic resharding,
+async safety, straggler monitoring, data-pipeline determinism."""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.training.checkpoint import CheckpointManager
+from repro.training.data import TokenPipeline
+from repro.training.trainer import (
+    FailureInjector,
+    SimulatedFailure,
+    TrainerConfig,
+    run_training,
+    run_with_recovery,
+)
+
+
+@pytest.fixture()
+def small_setup(tmp_path):
+    cfg = get_smoke_config("llama3.2-3b")
+    pipe = TokenPipeline(vocab_size=cfg.vocab_size, batch=2, seq_len=16,
+                         seed=3)
+    tcfg = TrainerConfig(steps=12, ckpt_every=4,
+                         ckpt_dir=str(tmp_path / "ckpt"))
+    return cfg, tcfg, pipe
+
+
+def test_failure_recovery_matches_clean_run(small_setup, tmp_path):
+    cfg, tcfg, pipe = small_setup
+    clean = run_training(cfg, tcfg, pipe)
+
+    tcfg2 = TrainerConfig(steps=12, ckpt_every=4,
+                          ckpt_dir=str(tmp_path / "ckpt2"))
+    injector = FailureInjector(fail_at_step=9)
+    recovered = run_with_recovery(cfg, tcfg2, pipe, injector)
+    assert recovered["restarts"] == 1
+    # post-restart losses equal the clean run's (exact replay from step 8)
+    for step in range(8, 12):
+        np.testing.assert_allclose(
+            recovered["losses_by_step"][step], clean["losses"][step],
+            rtol=1e-4,
+            err_msg=f"divergence at step {step} after recovery")
+    # final params identical
+    for a, b in zip(jax.tree_util.tree_leaves(clean["final_params"]),
+                    jax.tree_util.tree_leaves(recovered["final_params"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), rtol=1e-4)
+
+
+def test_unrecovered_failure_raises(small_setup, tmp_path):
+    cfg, _, pipe = small_setup
+    tcfg = TrainerConfig(steps=5, ckpt_every=100,  # no ckpt before failure
+                         ckpt_dir=str(tmp_path / "ckpt3"))
+    injector = FailureInjector(fail_at_step=3)
+    # restart also hits step 3 again (no checkpoint) -> injector fires once,
+    # second attempt passes step 3 because injector is one-shot
+    out = run_with_recovery(cfg, tcfg, pipe, injector)
+    assert out["restarts"] == 1
+
+
+def test_checkpoint_atomic_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(5), "b": {"c": jnp.ones((2, 3))}}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree, blocking=True)
+    assert mgr.all_steps() == [3, 4]          # GC keeps 2
+    assert not any(p.endswith(".tmp") for p in os.listdir(tmp_path))
+
+
+def test_elastic_restore_across_meshes(tmp_path):
+    """Save unsharded, restore onto a different device layout (elastic)."""
+    mgr = CheckpointManager(str(tmp_path), keep=1)
+    tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+    mgr.save(7, tree, blocking=True)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = {"w": jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec("data", None))}
+    like = {"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)}
+    restored = mgr.restore(7, like, shardings=sh)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+    assert restored["w"].sharding.spec == sh["w"].spec
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=1)
+    mgr.save(1, {"w": jnp.ones((4,))}, blocking=True)
+    with pytest.raises(ValueError):
+        mgr.restore(1, {"w": jax.ShapeDtypeStruct((5,), jnp.float32)})
+
+
+def test_pipeline_deterministic_and_seekable():
+    pipe = TokenPipeline(vocab_size=97, batch=4, seq_len=8, seed=11)
+    a = pipe.batch_at(42)
+    b = pipe.batch_at(42)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = pipe.batch_at(43)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_straggler_monitor_flags_slow_steps():
+    from repro.training.trainer import StragglerMonitor
+    mon = StragglerMonitor(factor=3.0, warmup=3)
+    for i in range(10):
+        mon.observe(i, 0.1)
+    mon.observe(10, 1.0)   # 10x median
+    assert len(mon.events) == 1 and mon.events[0]["step"] == 10

@@ -1,0 +1,99 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.bloom import bloom_build, bloom_probe
+from repro.kernels.segment_csr import segment_counts
+from repro.kernels.sorted_probe import sorted_probe
+
+
+@pytest.mark.parametrize("n_sorted", [1, 7, 128, 1000, 5000])
+@pytest.mark.parametrize("n_probe", [1, 63, 1024, 3000])
+def test_sorted_probe_shapes(n_sorted, n_probe):
+    rng = np.random.default_rng(n_sorted * 31 + n_probe)
+    sk = np.sort(rng.integers(0, 500, n_sorted)).astype(np.int32)
+    pk = rng.integers(-5, 505, n_probe).astype(np.int32)
+    lo, hi = sorted_probe(jnp.asarray(sk), jnp.asarray(pk), interpret=True)
+    rlo, rhi = ref.sorted_probe(jnp.asarray(sk), jnp.asarray(pk))
+    np.testing.assert_array_equal(np.asarray(lo), np.asarray(rlo))
+    np.testing.assert_array_equal(np.asarray(hi), np.asarray(rhi))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    keys=st.lists(st.integers(0, 40), min_size=1, max_size=200),
+    probes=st.lists(st.integers(-3, 43), min_size=1, max_size=100),
+)
+def test_sorted_probe_property(keys, probes):
+    sk = jnp.asarray(np.sort(np.array(keys, np.int32)))
+    pk = jnp.asarray(np.array(probes, np.int32))
+    lo, hi = sorted_probe(sk, pk, interpret=True)
+    rlo, rhi = ref.sorted_probe(sk, pk)
+    np.testing.assert_array_equal(np.asarray(lo), np.asarray(rlo))
+    np.testing.assert_array_equal(np.asarray(hi), np.asarray(rhi))
+
+
+@pytest.mark.parametrize("n", [1, 100, 2048, 5000])
+@pytest.mark.parametrize("segs", [1, 7, 100, 3000])
+def test_segment_counts(n, segs):
+    rng = np.random.default_rng(n + segs)
+    vals = rng.integers(0, segs, n).astype(np.int32)
+    valid = rng.random(n) < 0.8
+    got = segment_counts(jnp.asarray(vals), jnp.asarray(valid), segs,
+                         interpret=True)
+    want = ref.segment_counts(jnp.asarray(vals), jnp.asarray(valid), segs)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert int(np.asarray(got).sum()) == int(valid.sum())
+
+
+@pytest.mark.parametrize("n,bits", [(50, 128), (1000, 512), (4096, 4096)])
+@pytest.mark.parametrize("num_hashes", [1, 2, 3])
+def test_bloom_no_false_negatives(n, bits, num_hashes):
+    rng = np.random.default_rng(n + bits)
+    keys = rng.integers(0, 10_000, n).astype(np.int32)
+    valid = rng.random(n) < 0.9
+    b = bloom_build(jnp.asarray(keys), jnp.asarray(valid), bits,
+                    num_hashes, interpret=True)
+    rb = ref.bloom_build(jnp.asarray(keys), jnp.asarray(valid), bits,
+                         num_hashes)
+    np.testing.assert_array_equal(np.asarray(b), np.asarray(rb))
+    # every valid inserted key must probe True (no false negatives)
+    hits = bloom_probe(b, jnp.asarray(keys[valid]), num_hashes,
+                       interpret=True)
+    assert bool(np.asarray(hits).all())
+    rhits = ref.bloom_probe(rb, jnp.asarray(keys), num_hashes)
+    hits_all = bloom_probe(b, jnp.asarray(keys), num_hashes, interpret=True)
+    np.testing.assert_array_equal(np.asarray(hits_all), np.asarray(rhits))
+
+
+def test_csr_offsets_kernel_path():
+    from repro.graph import csr_offsets
+    vals = jnp.asarray(np.array([0, 1, 1, 3, 3, 3], np.int32))
+    valid = jnp.asarray(np.array([True] * 6))
+    off_k = csr_offsets(vals, valid, 5, use_kernel=True)
+    off_j = csr_offsets(vals, valid, 5, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(off_k), np.asarray(off_j))
+
+
+@pytest.mark.parametrize("sq,sk,hq,hkv,dh", [
+    (128, 128, 2, 1, 64),     # MQA, padded head_dim
+    (256, 256, 4, 2, 128),    # GQA, aligned
+    (200, 200, 2, 2, 32),     # non-multiple seq (padding path)
+])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 64),
+                                           (False, None)])
+def test_flash_attention_matches_ref(sq, sk, hq, hkv, dh, causal, window):
+    from repro.kernels.flash_attention import flash_attention
+    rng = np.random.default_rng(sq + hq + dh)
+    q = jnp.asarray(rng.normal(size=(1, sq, hq, dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, sk, hkv, dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, sk, hkv, dh)).astype(np.float32))
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          interpret=True)
+    want = ref.flash_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)

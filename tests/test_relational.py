@@ -1,0 +1,149 @@
+"""Unit + property tests for the static-shape relational substrate."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.relational import (
+    Table,
+    sort_merge_join,
+    join_count,
+    semi_join_mask,
+    filter_table,
+    dedup,
+    compact,
+    concat,
+)
+
+
+def _np_inner(lk, rk):
+    out = []
+    for i, a in enumerate(lk):
+        for j, b in enumerate(rk):
+            if a == b:
+                out.append((i, j))
+    return out
+
+
+def test_inner_join_basic():
+    left = Table.from_arrays(k=np.array([1, 2, 2, 3], np.int32),
+                             a=np.array([10, 20, 21, 30], np.int32))
+    right = Table.from_arrays(k=np.array([2, 2, 3, 9], np.int32),
+                              b=np.array([100, 101, 200, 900], np.int32))
+    out = sort_merge_join(left.prefix("L"), right.prefix("R"),
+                          on=[("L.k", "R.k")])
+    rows = out.to_rowset(["L.a", "R.b"])
+    want = {(20, 100, 0), (20, 101, 0), (21, 100, 0), (21, 101, 0),
+            (30, 200, 0)}
+    assert rows == want
+
+
+def test_left_outer_join_nulls():
+    left = Table.from_arrays(k=np.array([1, 2, 5], np.int32),
+                             a=np.array([10, 20, 50], np.int32))
+    right = Table.from_arrays(k=np.array([2, 2], np.int32),
+                              b=np.array([7, 8], np.int32))
+    out = sort_merge_join(left.prefix("L"), right.prefix("R"),
+                          on=[("L.k", "R.k")], how="left_outer",
+                          indicator="__nn__R")
+    data = out.to_numpy()
+    # every left row appears; unmatched rows have indicator False
+    assert sorted(data["L.a"].tolist()) == [10, 20, 20, 50]
+    matched = {(a, m) for a, m in zip(data["L.a"].tolist(),
+                                      data["__nn__R"].tolist())}
+    assert (10, False) in matched and (50, False) in matched
+    assert (20, True) in matched
+
+
+def test_join_respects_validity():
+    left = Table.from_arrays(k=np.array([1, 2], np.int32))
+    left = left.mask(np.array([True, False]))
+    right = Table.from_arrays(k2=np.array([1, 2], np.int32))
+    out = sort_merge_join(left.prefix("L"), right.prefix("R"),
+                          on=[("L.k", "R.k2")])
+    assert int(out.num_rows()) == 1
+
+
+def test_two_column_key_and_post_filter():
+    left = Table.from_arrays(x=np.array([1, 1, 2], np.int32),
+                             y=np.array([5, 6, 5], np.int32),
+                             z=np.array([9, 9, 8], np.int32))
+    right = Table.from_arrays(x=np.array([1, 1], np.int32),
+                              y=np.array([5, 6], np.int32),
+                              z=np.array([9, 7], np.int32))
+    out = sort_merge_join(
+        left.prefix("L"), right.prefix("R"),
+        on=[("L.x", "R.x"), ("L.y", "R.y"), ("L.z", "R.z")])
+    rows = out.to_rowset(["L.x", "L.y"])
+    assert rows == {(1, 5, 0)}  # (1,6) killed by z post-filter
+
+
+def test_static_capacity_path_matches_dynamic():
+    rng = np.random.default_rng(0)
+    lk = rng.integers(0, 20, size=64).astype(np.int32)
+    rk = rng.integers(0, 20, size=48).astype(np.int32)
+    left = Table.from_arrays(k=lk).prefix("L")
+    right = Table.from_arrays(k=rk).prefix("R")
+    dyn = sort_merge_join(left, right, on=[("L.k", "R.k")])
+    n = int(join_count(left, right, ("L.k",), ("R.k",)))
+    stat = sort_merge_join(left, right, on=[("L.k", "R.k")],
+                           capacity=max(8, n))
+    assert dyn.to_rowset() == stat.to_rowset()
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    lk=st.lists(st.integers(0, 12), min_size=0, max_size=40),
+    rk=st.lists(st.integers(0, 12), min_size=0, max_size=40),
+)
+def test_property_inner_join_matches_nested_loop(lk, rk):
+    if not lk or not rk:
+        return
+    left = Table.from_arrays(k=np.array(lk, np.int32),
+                             li=np.arange(len(lk), dtype=np.int32))
+    right = Table.from_arrays(k=np.array(rk, np.int32),
+                              ri=np.arange(len(rk), dtype=np.int32))
+    out = sort_merge_join(left.prefix("L"), right.prefix("R"),
+                          on=[("L.k", "R.k")])
+    got = {(int(a), int(b)) for a, b, _ in out.to_rowset(["L.li", "R.ri"])}
+    want = set(_np_inner(lk, rk))
+    assert got == want
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    lk=st.lists(st.integers(0, 8), min_size=1, max_size=30),
+    rk=st.lists(st.integers(0, 8), min_size=1, max_size=30),
+)
+def test_property_outer_join_covers_all_left_rows(lk, rk):
+    left = Table.from_arrays(k=np.array(lk, np.int32),
+                             li=np.arange(len(lk), dtype=np.int32))
+    right = Table.from_arrays(k=np.array(rk, np.int32))
+    out = sort_merge_join(left.prefix("L"), right.prefix("R"),
+                          on=[("L.k", "R.k")], how="left_outer",
+                          indicator="m")
+    data = out.to_numpy()
+    # Theorem 4.3: no left row lost, matched rows == inner join rows
+    assert set(data["L.li"].tolist()) == set(range(len(lk)))
+    inner = sum(1 for a in lk for b in rk if a == b)
+    assert int(data["m"].sum()) == inner
+
+
+def test_semi_join_mask():
+    left = Table.from_arrays(k=np.array([1, 2, 3], np.int32))
+    right = Table.from_arrays(j=np.array([2, 2, 9], np.int32))
+    m = semi_join_mask(left, right, on=[("k", "j")])
+    assert np.asarray(m).tolist() == [False, True, False]
+
+
+def test_filter_dedup_compact_concat():
+    t = Table.from_arrays(k=np.array([3, 1, 3, 2, 1], np.int32),
+                          v=np.array([0, 1, 2, 3, 4], np.int32))
+    f = filter_table(t, "k", ">=", 2)
+    assert sorted(f.to_numpy()["k"].tolist()) == [2, 3, 3]
+    d = dedup(t, ["k"])
+    assert sorted(d.to_numpy()["k"].tolist()) == [1, 2, 3]
+    c = compact(f)
+    v = np.asarray(c.valid)
+    assert v[: int(f.num_rows())].all() and not v[int(f.num_rows()):].any()
+    cc = concat([t, t])
+    assert int(cc.num_rows()) == 10
