@@ -6,6 +6,7 @@ import traceback
 def main() -> None:
     from benchmarks import (
         bench_breakdown,
+        bench_engine,
         bench_fraud,
         bench_jsmv_micro,
         bench_jsoj_micro,
@@ -22,6 +23,7 @@ def main() -> None:
         ("fig15_fraud", bench_fraud),
         ("table3_real", bench_real),
         ("fig16_breakdown", bench_breakdown),
+        ("engine_warm_vs_cold", bench_engine),
         ("kernels", bench_kernels),
     ]
     print("name,us_per_call,derived")

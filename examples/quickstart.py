@@ -1,5 +1,6 @@
-"""Quickstart: define a graph model over TPC-DS, extract it with ExtGraph,
-and inspect the hybrid plan the optimizer chose.
+"""Quickstart: build a graph model with the fluent builder, open an
+ExtractionEngine session over TPC-DS, and watch the second request hit the
+plan cache and reuse the materialized view built by the first.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,9 +8,40 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import extract_graph, optimize, plan_cost       # noqa: E402
-from repro.data import make_tpcds, recommendation_model        # noqa: E402
-from repro.graph import build_csr                              # noqa: E402
+from repro.api import ExtractionEngine, model_to_spec                   # noqa: E402
+from repro.core import GraphModel, plan_cost                            # noqa: E402
+from repro.data import make_tpcds                                       # noqa: E402
+from repro.graph import build_csr                                       # noqa: E402
+
+
+def recommendation_model() -> GraphModel:
+    """Figure 11(a) built fluently: no hand-assembled dataclasses."""
+    return (
+        GraphModel.builder("recommendation_store")
+        .vertex("Customer", table="customer", id_col="c_id",
+                props=("c_prop",))
+        .vertex("Item", table="item", id_col="i_id", props=("i_price",))
+        .vertex("Promotion", table="promotion", id_col="p_id")
+        .edge("Buy", src="Customer", dst="Item",
+              relations=[("C", "customer"), ("F", "store_sales"),
+                         ("I", "item")],
+              joins=["C.c_id == F.c_sk", "F.i_sk == I.i_id"])
+        .edge("Co-pur", src="Customer", dst="Customer",
+              relations=[("C1", "customer"), ("F1", "store_sales"),
+                         ("I", "item"), ("F2", "store_sales"),
+                         ("C2", "customer")],
+              joins=["C1.c_id == F1.c_sk", "F1.i_sk == I.i_id",
+                     "I.i_id == F2.i_sk", "F2.c_sk == C2.c_id"],
+              src_col="C1.c_id", dst_col="C2.c_id")
+        .edge("Same-pro", src="Customer", dst="Customer",
+              relations=[("C1", "customer"), ("F1", "store_sales"),
+                         ("P", "promotion"), ("F2", "store_sales"),
+                         ("C2", "customer")],
+              joins=["C1.c_id == F1.c_sk", "F1.p_sk == P.p_id",
+                     "P.p_id == F2.p_sk", "F2.c_sk == C2.c_id"],
+              src_col="C1.c_id", dst_col="C2.c_id")
+        .build()
+    )
 
 
 def main():
@@ -18,25 +50,35 @@ def main():
     for name, st in sorted(db.stats.items()):
         print(f"   {name:<16} {st.rows:>8} rows")
 
-    print("\n== 2. the graph model (Figure 11(a): Buy / Co-pur / Same-pro) ==")
-    model = recommendation_model("store")
+    print("\n== 2. the graph model, via the fluent builder ==")
+    model = recommendation_model()
     for e in model.edges:
         tables = " |><| ".join(r.table for r in e.query.relations)
         print(f"   {e.label:<10} = {tables}")
+    print(f"   (serializable: {len(model_to_spec(model)['edges'])} edge "
+          "specs via model_to_spec)")
 
-    print("\n== 3. hybrid join-sharing plan (Algorithm 2) ==")
-    plan = optimize(db, model.queries(), verbose=True)
-    print(plan.describe())
-    print(f"   estimated cost: {plan_cost(db, plan):.3g} byte-units")
+    print("\n== 3. open an extraction session ==")
+    engine = ExtractionEngine(db)
 
-    print("\n== 4. extract ==")
-    for method in ("ringo", "extgraph"):
-        graph, t = extract_graph(db, model, method=method)
-        sizes = {k: int(v.num_rows()) for k, v in graph.edges.items()}
-        print(f"   {method:<10} {t.total_s:6.2f}s  edges={sizes}")
+    print("\n== 4. request 1 (cold): Algorithm 2 plans, views materialize ==")
+    r1 = engine.extract(model, verbose=True)
+    print(r1.plan.describe())
+    print(f"   estimated cost: {plan_cost(db.snapshot(), r1.plan):.3g} byte-units")
+    print(f"   plan {r1.timings.plan_s:.3f}s  extract {r1.timings.extract_s:.3f}s  "
+          f"built={list(r1.provenance.views_built)}")
 
-    print("\n== 5. build the CSR graph ==")
-    csr = build_csr(graph, model)
+    print("\n== 5. request 2 (warm): plan-cache hit, views reused ==")
+    r2 = engine.extract(model)
+    sizes = {k: int(v.num_rows()) for k, v in r2.edges.items()}
+    print(f"   plan {r2.timings.plan_s:.3f}s  extract {r2.timings.extract_s:.3f}s  "
+          f"cache_hit={r2.provenance.plan_cache_hit}  "
+          f"reused={list(r2.provenance.views_reused)}")
+    print(f"   edges={sizes}")
+    print(f"   warm speedup: {r1.timings.total_s / r2.timings.total_s:.2f}x")
+
+    print("\n== 6. build the CSR graph ==")
+    csr = build_csr(r2.graph, model)
     print(f"   vertices={csr.num_vertices}  edge_counts={csr.edge_counts}")
 
 

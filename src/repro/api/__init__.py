@@ -1,0 +1,27 @@
+# Public extraction API: a session-based engine that carries the paper's
+# join sharing (JS-OJ / JS-MV) across requests, plus fluent/spec model
+# construction.  The one-shot repro.core.extract_graph() is deprecated in
+# favour of this surface.
+from repro.api.builder import (
+    GraphModelBuilder,
+    join_query,
+    model_from_json,
+    model_from_spec,
+    model_to_spec,
+)
+from repro.api.engine import (
+    ExtractionEngine,
+    ExtractionResult,
+    PlanProvenance,
+)
+
+__all__ = [
+    "ExtractionEngine",
+    "ExtractionResult",
+    "PlanProvenance",
+    "GraphModelBuilder",
+    "join_query",
+    "model_from_spec",
+    "model_from_json",
+    "model_to_spec",
+]

@@ -1,0 +1,213 @@
+"""Session-based extraction engine with cross-request plan & view caching.
+
+The paper shares join work *within* one extraction (JS-OJ merges sibling
+queries, JS-MV materializes common sub-patterns).  A long-lived
+:class:`ExtractionEngine` extends that sharing *across* requests:
+
+* **Plan cache** — keyed by the alias-independent signature of every edge
+  query in the model plus a fingerprint of the database's ANALYZE stats.
+  A repeated model skips Algorithm 2 entirely.
+* **View cache** — JS-MV views built for one request are kept (content-
+  addressed by their canonical pattern signature) and registered into later
+  requests, where the planner treats them as zero-cost MV candidates and
+  execution skips their materialization.  Views are invalidated by stats
+  fingerprint when ``db.analyze()`` observes a changed base table.
+
+Every request runs against ``db.snapshot()``, so views and re-analyzed
+stats never leak into the caller's database.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+
+from repro.core.database import Database, Fingerprint, TableStats
+from repro.core.extract import (
+    BASELINE_METHODS,
+    ExtractedGraph,
+    PLANNED_METHODS,
+    Timings,
+    extract_vertices,
+    plan_queries,
+    run_baseline,
+    run_plan,
+)
+from repro.core.jsmv import ViewDef
+from repro.core.model import GraphModel, Signature, model_signature
+from repro.core.planner import ExtractionPlan
+from repro.core.shared import SharedPattern
+from repro.relational import Table
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanProvenance:
+    """Where this request's plan and views came from."""
+
+    method: str
+    plan_cache_hit: bool = False
+    views_built: Tuple[str, ...] = ()
+    views_reused: Tuple[str, ...] = ()
+
+
+@dataclasses.dataclass
+class ExtractionResult:
+    """Graph + timings + plan provenance for one ``engine.extract()``."""
+
+    graph: ExtractedGraph
+    timings: Timings
+    provenance: PlanProvenance
+    plan: Optional[ExtractionPlan] = None
+
+    @property
+    def vertices(self) -> Dict[str, Table]:
+        return self.graph.vertices
+
+    @property
+    def edges(self) -> Dict[str, Table]:
+        return self.graph.edges
+
+
+@dataclasses.dataclass
+class _CachedView:
+    name: str
+    pattern: SharedPattern
+    table: Table
+    stats: TableStats
+    base_fingerprints: Dict[str, Fingerprint]  # base table -> stats digest
+
+
+class ExtractionEngine:
+    """Long-lived extraction session over one :class:`Database`.
+
+    ::
+
+        engine = ExtractionEngine(db)
+        result = engine.extract(model)          # cold: plans + builds views
+        result = engine.extract(model)          # warm: plan hit, views reused
+        result.provenance.plan_cache_hit        # True
+        result.provenance.views_reused          # ("view_ab12cd34ef", ...)
+
+    The engine never mutates ``db``; call ``db.analyze(table)`` after
+    changing a base table and dependent cached state is discarded on the
+    next request.
+
+    Both caches are LRU-bounded (``max_plans`` / ``max_views``) so a
+    long-lived session serving many distinct models cannot grow without
+    bound — cached views pin whole materialized join results.
+    """
+
+    def __init__(self, db: Database, max_plans: int = 128,
+                 max_views: int = 32):
+        self.db = db
+        self.max_plans = max_plans
+        self.max_views = max_views
+        self._plans: "collections.OrderedDict[Tuple, ExtractionPlan]" = \
+            collections.OrderedDict()
+        self._views: "collections.OrderedDict[Signature, _CachedView]" = \
+            collections.OrderedDict()
+
+    # -- cache bookkeeping ---------------------------------------------------
+    def clear(self) -> None:
+        self._plans.clear()
+        self._views.clear()
+
+    def cache_info(self) -> Dict[str, int]:
+        return {"plans": len(self._plans), "views": len(self._views)}
+
+    def _table_fingerprint(self, table: str) -> Optional[Fingerprint]:
+        st = self.db.stats.get(table)
+        return None if st is None else st.fingerprint()
+
+    def _evict_stale_views(self) -> List[str]:
+        """Drop cached views whose base-table stats changed (or vanished)."""
+        evicted = []
+        for sig, cv in list(self._views.items()):
+            for table, fp in cv.base_fingerprints.items():
+                if self._table_fingerprint(table) != fp:
+                    del self._views[sig]
+                    evicted.append(cv.name)
+                    break
+        return evicted
+
+    def _request_db(self) -> Database:
+        """Per-request snapshot with every live cached view registered."""
+        rdb = self.db.snapshot()
+        for cv in self._views.values():
+            rdb.add_view(cv.name, cv.table, cv.stats)
+        return rdb
+
+    def _harvest_views(self, rdb: Database, plan: ExtractionPlan,
+                       built: List[str], reused: List[str]) -> None:
+        """Pull freshly materialized views out of the request db into cache."""
+        built_set, reused_set = set(built), set(reused)
+        for v in list(plan.reused) + list(plan.views):
+            if v.name in reused_set and v.pattern.signature in self._views:
+                self._views.move_to_end(v.pattern.signature)  # LRU touch
+                continue
+            if v.name not in built_set:
+                continue
+            self._views[v.pattern.signature] = _CachedView(
+                name=v.name,
+                pattern=v.pattern,
+                table=rdb.tables[v.name],
+                stats=rdb.stats[v.name],
+                base_fingerprints={
+                    r.table: self._table_fingerprint(r.table)
+                    for r in v.pattern.relations
+                },
+            )
+            self._views.move_to_end(v.pattern.signature)
+        while len(self._views) > self.max_views:
+            self._views.popitem(last=False)
+
+    # -- extraction ----------------------------------------------------------
+    def extract(self, model: GraphModel, method: str = "extgraph",
+                verbose: bool = False) -> ExtractionResult:
+        if method not in PLANNED_METHODS + BASELINE_METHODS:
+            raise ValueError(f"unknown method {method!r}")
+        queries = model.queries()
+        timings = Timings()
+
+        if method in PLANNED_METHODS:
+            t0 = time.perf_counter()
+            self._evict_stale_views()
+            rdb = self._request_db()
+            key = (model_signature(model), self.db.fingerprint(), method)
+            plan = self._plans.get(key)
+            hit = plan is not None
+            if hit:
+                self._plans.move_to_end(key)
+            else:
+                cached = [ViewDef(cv.name, cv.pattern)
+                          for cv in self._views.values()]
+                plan = plan_queries(rdb, queries, method, verbose=verbose,
+                                    cached_views=cached)
+                self._plans[key] = plan
+                while len(self._plans) > self.max_plans:
+                    self._plans.popitem(last=False)
+            timings.plan_s = time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            edges, built, reused = run_plan(rdb, plan)
+            for label in edges:
+                jax.block_until_ready(edges[label].valid)
+            timings.extract_s = time.perf_counter() - t0
+            self._harvest_views(rdb, plan, built, reused)
+            provenance = PlanProvenance(
+                method=method, plan_cache_hit=hit,
+                views_built=tuple(built), views_reused=tuple(reused))
+        else:
+            plan = None
+            edges, ext_s, conv_s = run_baseline(self.db, queries, method)
+            timings.extract_s, timings.convert_s = ext_s, conv_s
+            provenance = PlanProvenance(method=method)
+
+        vertices = extract_vertices(self.db, model)
+        graph = ExtractedGraph(vertices=vertices, edges=edges)
+        graph.block_until_ready()
+        return ExtractionResult(graph=graph, timings=timings,
+                                provenance=provenance, plan=plan)

@@ -9,12 +9,18 @@ from repro.core.model import (
     Predicate,
     Relation,
     VertexDef,
+    model_signature,
+    pattern_signature,
+    query_signature,
 )
 from repro.core.database import Database, TableStats
 from repro.core.extract import ExtractedGraph, Timings, extract_graph
 from repro.core.planner import ExtractionPlan, PlanUnit, optimize, plan_cost
 
 __all__ = [
+    "model_signature",
+    "pattern_signature",
+    "query_signature",
     "ColumnRef",
     "EdgeDef",
     "GraphModel",

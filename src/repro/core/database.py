@@ -2,11 +2,13 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 from repro.relational import Table, count_distinct
+
+Fingerprint = Tuple  # nested tuples, hashable
 
 
 @dataclasses.dataclass
@@ -22,6 +24,10 @@ class TableStats:
 
     def ndv(self, col: str) -> int:
         return max(1, self.distinct.get(col, self.rows))
+
+    def fingerprint(self) -> Fingerprint:
+        """Hashable digest of these stats (cache-invalidation token)."""
+        return (self.rows, self.width, tuple(sorted(self.distinct.items())))
 
 
 class Database:
@@ -58,6 +64,23 @@ class Database:
                         width=len(t.column_names()))
         self.stats[name] = st
         return st
+
+    def snapshot(self) -> "Database":
+        """Shallow per-request copy: shared column arrays, private catalogs.
+
+        Views registered on (and stats re-analyzed in) the snapshot never
+        leak back into this database — the isolation the extraction engine
+        relies on.
+        """
+        clone = Database()
+        clone.tables = dict(self.tables)
+        clone.stats = dict(self.stats)
+        return clone
+
+    def fingerprint(self) -> Fingerprint:
+        """Digest of the whole catalog's stats; changes when ANALYZE does."""
+        return tuple(sorted(
+            (name, st.fingerprint()) for name, st in self.stats.items()))
 
     def total_bytes(self) -> int:
         return sum(s.bytes() for s in self.stats.values())

@@ -11,7 +11,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 
-from repro.core.cost import estimate_query
+from repro.core.cost import estimate_query, view_stats_from_estimate
 from repro.core.database import Database
 from repro.core.jsoj import MergedQuery
 from repro.core.model import ColumnRef, JoinCond, JoinQuery, Relation
@@ -151,3 +151,17 @@ def materialize_view(db: Database, name: str, query: JoinQuery,
     result = execute_query(db, query)
     db.add_view(name, result, stats)
     return result
+
+
+def ensure_view(db: Database, name: str, query: JoinQuery) -> bool:
+    """Materialize ``name`` (with estimated stats) unless already registered.
+
+    View names are content-addressed (:func:`repro.core.jsmv.view_name`), so
+    presence implies the stored table was built from the same canonical
+    pattern — an engine cache hit.  Returns True iff the view was built.
+    """
+    if name in db.tables:
+        return False
+    est = estimate_query(db, query)
+    materialize_view(db, name, query, view_stats_from_estimate(est))
+    return True

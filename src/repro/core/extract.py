@@ -1,6 +1,11 @@
 """Top-level graph extraction (Definitions 2.2 / 3.1).
 
-``extract_graph(db, model, method=...)`` runs one of:
+The plan/execute machinery lives here; the public entry point is now
+:class:`repro.api.ExtractionEngine`, which adds cross-request plan and
+materialized-view caching on top of these primitives.
+
+``extract_graph(db, model, method=...)`` is kept as a deprecated wrapper
+over a throwaway engine and runs one of:
 
 * ``extgraph`` — Alg 2 hybrid plan (JS-OJ + JS-MV), the paper's method
 * ``extgraph-oj`` / ``extgraph-mv`` — ablations (Fig 16's middle bars)
@@ -14,7 +19,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Optional, Tuple
+import warnings
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 
@@ -22,14 +28,17 @@ from repro.core import baselines
 from repro.core.database import Database
 from repro.core.executor import (
     edge_output,
+    ensure_view,
     execute_merged,
     execute_query,
-    materialize_view,
 )
+from repro.core.jsmv import ViewDef
 from repro.core.model import GraphModel
-from repro.core.cost import estimate_query, view_stats_from_estimate
 from repro.core.planner import ExtractionPlan, optimize
 from repro.relational import Table
+
+BASELINE_METHODS = ("ringo", "graphgen", "r2gsync")
+PLANNED_METHODS = ("extgraph", "extgraph-oj", "extgraph-mv")
 
 
 @dataclasses.dataclass
@@ -65,23 +74,39 @@ def extract_vertices(db: Database, model: GraphModel) -> Dict[str, Table]:
     return out
 
 
-def execute_plan(db: Database, plan: ExtractionPlan) -> Dict[str, Table]:
-    """Materialize views in order, then run every unit."""
-    edges: Dict[str, Table] = {}
+def run_plan(
+    db: Database, plan: ExtractionPlan
+) -> Tuple[Dict[str, Table], List[str], List[str]]:
+    """Execute a plan; returns (edges, views built, views reused).
+
+    ``plan.reused`` views must already be registered in ``db``; ``plan.views``
+    entries that happen to be registered too (a cached plan replayed against
+    a warm view cache) are skipped and counted as reused.
+    """
+    built: List[str] = []
+    reused: List[str] = [v.name for v in plan.reused]
     for v in plan.views:
-        est = estimate_query(db, v.as_query())
-        materialize_view(db, v.name, v.as_query(),
-                         view_stats_from_estimate(est))
+        if ensure_view(db, v.name, v.as_query()):
+            built.append(v.name)
+        else:
+            reused.append(v.name)
+    edges: Dict[str, Table] = {}
     for u in plan.units:
         if u.is_single:
             res = execute_query(db, u.single)
             edges[u.single.name] = edge_output(res, u.single.src, u.single.dst)
         else:
             edges.update(execute_merged(db, u.group))
-    return edges
+    return edges, built, reused
 
 
-def _ablation_plan(db: Database, queries, oj_only: bool) -> ExtractionPlan:
+def execute_plan(db: Database, plan: ExtractionPlan) -> Dict[str, Table]:
+    """Materialize views in order, then run every unit (edges only)."""
+    return run_plan(db, plan)[0]
+
+
+def _ablation_plan(db: Database, queries, oj_only: bool,
+                   cached_views: Sequence[ViewDef] = ()) -> ExtractionPlan:
     """Greedy Alg 2 restricted to one move type (Fig 16's JS-OJ / JS-MV bars)."""
     from repro.core.planner import (
         PlanUnit, _mv_candidates, _oj_candidates, plan_cost)
@@ -89,7 +114,8 @@ def _ablation_plan(db: Database, queries, oj_only: bool) -> ExtractionPlan:
         views=(), units=tuple(PlanUnit(single=q) for q in queries))
     best = plan_cost(db, plan)
     while True:
-        cands = _oj_candidates(plan) if oj_only else _mv_candidates(plan)
+        cands = (_oj_candidates(plan) if oj_only
+                 else _mv_candidates(plan, cached_views))
         scored = []
         for c in cands:
             try:
@@ -106,51 +132,57 @@ def _ablation_plan(db: Database, queries, oj_only: bool) -> ExtractionPlan:
     return plan
 
 
+def plan_queries(db: Database, queries, method: str, verbose: bool = False,
+                 cached_views: Sequence[ViewDef] = ()) -> Optional[ExtractionPlan]:
+    """Plan for one of the planned methods; None for the baselines."""
+    if method == "extgraph":
+        return optimize(db, queries, verbose=verbose,
+                        cached_views=cached_views)
+    if method in ("extgraph-oj", "extgraph-mv"):
+        return _ablation_plan(db, queries, oj_only=(method == "extgraph-oj"),
+                              cached_views=cached_views)
+    if method in BASELINE_METHODS:
+        return None
+    raise ValueError(f"unknown method {method!r}")
+
+
+def run_baseline(db: Database, queries, method: str):
+    """Execute one of the non-planned methods; returns (edges, ext_s, conv_s)."""
+    if method == "ringo":
+        t0 = time.perf_counter()
+        edges = {}
+        for q in queries:
+            res = execute_query(db, q)
+            edges[q.name] = edge_output(res, q.src, q.dst)
+            jax.block_until_ready(edges[q.name].valid)
+        return edges, time.perf_counter() - t0, 0.0
+    if method == "graphgen":
+        return baselines.run_graphgen(db, queries)
+    if method == "r2gsync":
+        return baselines.run_r2gsync(db, queries)
+    raise ValueError(f"unknown baseline {method!r}")
+
+
 def extract_graph(
     db: Database,
     model: GraphModel,
     method: str = "extgraph",
     verbose: bool = False,
 ) -> Tuple[ExtractedGraph, Timings]:
-    """Definition 3.1's four steps, timed."""
-    timings = Timings()
-    queries = model.queries()
+    """Definition 3.1's four steps, timed.
 
-    t0 = time.perf_counter()
-    if method == "extgraph":
-        plan = optimize(db, queries, verbose=verbose)
-    elif method in ("extgraph-oj", "extgraph-mv"):
-        plan = _ablation_plan(db, queries, oj_only=(method == "extgraph-oj"))
-    elif method in ("ringo", "graphgen", "r2gsync"):
-        plan = None
-    else:
-        raise ValueError(f"unknown method {method!r}")
-    timings.plan_s = time.perf_counter() - t0
+    .. deprecated::
+        One-shot entry point kept for compatibility; it re-plans and
+        re-materializes everything on every call.  Use
+        :class:`repro.api.ExtractionEngine` to share plans and views across
+        requests.
+    """
+    warnings.warn(
+        "extract_graph() is deprecated; use repro.api.ExtractionEngine, "
+        "which caches plans and materialized views across requests",
+        DeprecationWarning, stacklevel=2)
+    from repro.api import ExtractionEngine  # lazy: api builds on core
 
-    t0 = time.perf_counter()
-    if plan is not None:
-        shadow = Database()
-        shadow.tables = dict(db.tables)
-        shadow.stats = dict(db.stats)
-        edges = execute_plan(shadow, plan)
-        for label in edges:
-            jax.block_until_ready(edges[label].valid)
-        timings.extract_s = time.perf_counter() - t0
-    elif method == "ringo":
-        edges = {}
-        for q in queries:
-            res = execute_query(db, q)
-            edges[q.name] = edge_output(res, q.src, q.dst)
-            jax.block_until_ready(edges[q.name].valid)
-        timings.extract_s = time.perf_counter() - t0
-    elif method == "graphgen":
-        edges, ext_s, conv_s = baselines.run_graphgen(db, queries)
-        timings.extract_s, timings.convert_s = ext_s, conv_s
-    else:  # r2gsync
-        edges, ext_s, conv_s = baselines.run_r2gsync(db, queries)
-        timings.extract_s, timings.convert_s = ext_s, conv_s
-
-    vertices = extract_vertices(db, model)
-    graph = ExtractedGraph(vertices=vertices, edges=edges)
-    graph.block_until_ready()
-    return graph, timings
+    result = ExtractionEngine(db).extract(model, method=method,
+                                          verbose=verbose)
+    return result.graph, result.timings

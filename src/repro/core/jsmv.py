@@ -11,10 +11,24 @@ the view column "<p_alias>.<col>" through the view relation.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.model import ColumnRef, JoinCond, JoinQuery, Relation
 from repro.core.shared import Embedding, SharedPattern, find_embeddings
+
+
+def view_name(pattern: SharedPattern) -> str:
+    """Content-addressed view name, stable across plans and requests.
+
+    Two plans that materialize the same canonical pattern produce the same
+    name, which is what lets the engine's view cache satisfy a plan cached
+    before the view existed (the cached plan's view names resolve against
+    the cache by construction).  The ``view_`` prefix doubles as the
+    no-views-of-views guard in the planner.
+    """
+    digest = hashlib.md5(repr(pattern.signature).encode()).hexdigest()
+    return f"view_{digest[:10]}"
 
 
 @dataclasses.dataclass(frozen=True)

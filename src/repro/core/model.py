@@ -195,6 +195,12 @@ class GraphModel:
     def queries(self) -> List[JoinQuery]:
         return [e.query for e in self.edges]
 
+    @staticmethod
+    def builder(name: str):
+        """Fluent construction: ``GraphModel.builder("m").vertex(...).edge(...).build()``."""
+        from repro.api.builder import GraphModelBuilder
+        return GraphModelBuilder(name)
+
 
 # ---------------------------------------------------------------------------
 # Pattern canonicalization (for shared-subgraph dedup and JS-MV view naming)
@@ -230,3 +236,49 @@ def pattern_signature(
             best = sig
     assert best is not None
     return best
+
+
+def query_signature(query: JoinQuery) -> Signature:
+    """Canonical, alias-independent signature of a whole edge query.
+
+    Extends :func:`pattern_signature` with the (canonically remapped) src/dst
+    output refs, so two queries get the same signature iff they compute the
+    same edge table up to alias renaming.  Used as the plan-cache key by
+    :class:`repro.api.ExtractionEngine`.
+    """
+    rels = sorted(query.relations)
+    best: Optional[Signature] = None
+    for perm in itertools.permutations(range(len(rels))):
+        tables = [(rels[perm[i]].table, rels[perm[i]].filters)
+                  for i in range(len(rels))]
+        if tables != sorted(tables):
+            continue
+        remap = {rels[perm[i]].alias: f"p{i}" for i in range(len(rels))}
+        sig_conds = tuple(sorted(
+            tuple(sorted(((remap[c.left], c.lcol), (remap[c.right], c.rcol))))
+            for c in query.conds))
+        sig = (
+            tuple(tables),
+            sig_conds,
+            (remap[query.src.alias], query.src.col),
+            (remap[query.dst.alias], query.dst.col),
+        )
+        if best is None or sig < best:
+            best = sig
+    assert best is not None
+    return best
+
+
+def model_signature(model: GraphModel) -> Signature:
+    """Alias-independent signature of every edge query in a model.
+
+    Two models share a signature iff their edge queries are pairwise
+    isomorphic (same labels, tables, filters, join conditions and output
+    columns) — exactly the condition under which an extraction plan computed
+    for one is valid for the other.
+    """
+    return tuple(
+        (e.label, e.src_label, e.dst_label, e.query.name,
+         query_signature(e.query))
+        for e in model.edges
+    )

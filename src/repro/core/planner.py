@@ -23,7 +23,7 @@ from repro.core.cost import (
     view_stats_from_estimate,
 )
 from repro.core.database import Database
-from repro.core.jsmv import ViewDef, rewrite_query
+from repro.core.jsmv import ViewDef, rewrite_query, view_name
 from repro.core.jsoj import MergedQuery, estimate_merged, merge_queries
 from repro.core.model import JoinQuery
 from repro.core.shared import (
@@ -64,13 +64,22 @@ def group_unit(pattern, members) -> PlanUnit:
 
 @dataclasses.dataclass(frozen=True)
 class ExtractionPlan:
-    """Views (materialized in order) + execution units."""
+    """Views (materialized in order) + execution units.
+
+    ``reused`` lists views the plan *reads* but does not build: they already
+    exist in the database (the engine's cross-request view cache registers
+    them before planning), so Eq 5 charges them nothing.
+    """
 
     views: Tuple[ViewDef, ...]
     units: Tuple[PlanUnit, ...]
+    reused: Tuple[ViewDef, ...] = ()
 
     def describe(self) -> str:
         lines = []
+        for v in self.reused:
+            tables = ",".join(r.table for r in v.pattern.relations)
+            lines.append(f"MV {v.name} = [{tables}] (reused, free)")
         for v in self.views:
             tables = ",".join(r.table for r in v.pattern.relations)
             lines.append(f"MV {v.name} = [{tables}] ({v.pattern.num_conds} joins)")
@@ -85,19 +94,29 @@ class ExtractionPlan:
 
 
 def _plan_db(db: Database, views: Sequence[ViewDef]) -> Database:
-    """A stats-only shadow database where views carry *estimated* stats."""
+    """A stats-only shadow database where views carry *estimated* stats.
+
+    Views already registered in ``db`` (the engine's cached views) keep
+    their stored stats; only missing ones get a fresh estimate.
+    """
     pdb = Database()
     pdb.stats = dict(db.stats)
     pdb.tables = dict(db.tables)  # names only; cost never touches data
     for v in views:
+        if v.name in pdb.stats:
+            continue
         est = estimate_query(pdb, v.as_query())
         pdb.stats[v.name] = view_stats_from_estimate(est)
     return pdb
 
 
 def plan_cost(db: Database, plan: ExtractionPlan) -> float:
-    """Eq 1 / Eq 3 / Eq 5 assembled over the whole plan."""
-    pdb = _plan_db(db, plan.views)
+    """Eq 1 / Eq 3 / Eq 5 assembled over the whole plan.
+
+    Reused views contribute stats but no materialization cost — they
+    already exist, which is the engine's whole point.
+    """
+    pdb = _plan_db(db, tuple(plan.reused) + tuple(plan.views))
     total = 0.0
     for v in plan.views:
         total += view_cost(estimate_query(pdb, v.as_query()))
@@ -128,6 +147,7 @@ def _oj_candidates(plan: ExtractionPlan) -> List[ExtractionPlan]:
                         views=plan.views,
                         units=rest + (group_unit(
                             pattern, [(a.single, emb_a), (b.single, emb_b)]),),
+                        reused=plan.reused,
                     ))
         elif a.is_single != b.is_single:
             single = a.single if a.is_single else b.single
@@ -139,6 +159,7 @@ def _oj_candidates(plan: ExtractionPlan) -> List[ExtractionPlan]:
                     units=rest + (group_unit(
                         grp.group.pattern,
                         list(grp.members) + [(single, emb)]),),
+                    reused=plan.reused,
                 ))
         else:
             # group + group with the identical pattern
@@ -148,49 +169,89 @@ def _oj_candidates(plan: ExtractionPlan) -> List[ExtractionPlan]:
                     units=rest + (group_unit(
                         a.group.pattern,
                         list(a.members) + list(b.members)),),
+                    reused=plan.reused,
                 ))
     return out
 
 
-def _mv_candidates(plan: ExtractionPlan) -> List[ExtractionPlan]:
-    """All plans reachable by materializing one shared pattern."""
+def _rewrite_units(
+    units: Sequence[PlanUnit], view: ViewDef
+) -> Tuple[Tuple[PlanUnit, ...], int]:
+    """Rewrite every single-query unit over ``view``; returns (units, uses)."""
+    new_units: List[PlanUnit] = []
+    uses = 0
+    for u in units:
+        if not u.is_single:
+            new_units.append(u)
+            continue
+        rw, n = rewrite_query(u.single, view)
+        uses += n
+        new_units.append(PlanUnit(single=rw) if n else u)
+    return tuple(new_units), uses
+
+
+def _mv_candidates(
+    plan: ExtractionPlan,
+    cached_views: Sequence[ViewDef] = (),
+) -> List[ExtractionPlan]:
+    """All plans reachable by materializing (or reusing) one shared pattern.
+
+    ``cached_views`` already exist in the database (built by an earlier
+    request), so adopting one costs nothing (Eq 5 with Join(V) = 0) — a
+    single use suffices, whereas a fresh view must be used twice to ever
+    pay for itself.
+    """
     out: List[ExtractionPlan] = []
     singles = [u.single for u in plan.units if u.is_single]
     if not singles:
         return out
-    existing = {v.pattern.signature for v in plan.views}
+    existing = ({v.pattern.signature for v in plan.views}
+                | {v.pattern.signature for v in plan.reused})
+    cached_by_sig = {v.pattern.signature: v for v in cached_views}
+
+    # pre-existing views: free to read, so even one use is a candidate
+    for view in cached_views:
+        if view.pattern.signature in existing:
+            continue
+        new_units, uses = _rewrite_units(plan.units, view)
+        if uses < 1:
+            continue
+        out.append(ExtractionPlan(
+            views=plan.views, units=new_units,
+            reused=plan.reused + (view,)))
+
     for pattern, _ in enumerate_shared_patterns(singles):
         if pattern.signature in existing:
             continue
+        if pattern.signature in cached_by_sig:
+            continue  # already proposed above as a free reuse
         if any(r.table.startswith("view_") for r in pattern.relations):
             continue  # no views-of-views (keeps dependency order trivial)
-        vname = f"view_{len(plan.views)}"
-        view = ViewDef(name=vname, pattern=pattern)
-        new_units: List[PlanUnit] = []
-        uses = 0
-        for u in plan.units:
-            if not u.is_single:
-                new_units.append(u)
-                continue
-            rw, n = rewrite_query(u.single, view)
-            uses += n
-            new_units.append(PlanUnit(single=rw) if n else u)
+        view = ViewDef(name=view_name(pattern), pattern=pattern)
+        new_units, uses = _rewrite_units(plan.units, view)
         if uses < 2:
             continue  # a view used once can never pay for itself
         out.append(ExtractionPlan(
-            views=plan.views + (view,), units=tuple(new_units)))
+            views=plan.views + (view,), units=new_units,
+            reused=plan.reused))
     return out
 
 
 def optimize(db: Database, queries: Sequence[JoinQuery],
-             verbose: bool = False) -> ExtractionPlan:
-    """Algorithm 2: greedy hybrid plan search from the Ringo baseline."""
+             verbose: bool = False,
+             cached_views: Sequence[ViewDef] = ()) -> ExtractionPlan:
+    """Algorithm 2: greedy hybrid plan search from the Ringo baseline.
+
+    ``cached_views`` are views that already exist in ``db`` (registered with
+    their estimated stats); the search may adopt them as zero-cost JS-MV
+    rewrites, which is how cross-request sharing reaches the planner.
+    """
     plan = ExtractionPlan(
         views=(), units=tuple(PlanUnit(single=q) for q in queries))
     best_cost = plan_cost(db, plan)
     trace = [("base", best_cost)]
     while True:
-        candidates = _oj_candidates(plan) + _mv_candidates(plan)
+        candidates = _oj_candidates(plan) + _mv_candidates(plan, cached_views)
         scored: List[Tuple[float, ExtractionPlan]] = []
         for cand in candidates:
             try:

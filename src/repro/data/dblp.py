@@ -12,10 +12,9 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.api.builder import join_query
 from repro.core.database import Database
-from repro.core.model import (
-    ColumnRef, EdgeDef, GraphModel, JoinCond, JoinQuery, Relation, VertexDef,
-)
+from repro.core.model import GraphModel, JoinQuery
 from repro.relational import Table
 
 
@@ -55,53 +54,32 @@ def make_dblp(scale: int = 1, seed: int = 1) -> Database:
 
 
 def coauth_query() -> JoinQuery:
-    return JoinQuery(
-        name="Co-auth",
-        relations=(
-            Relation("A1", "author"), Relation("W1", "wrote"),
-            Relation("P", "paper"), Relation("W2", "wrote"),
-            Relation("A2", "author"),
-        ),
-        conds=(
-            JoinCond("A1", "a_id", "W1", "a_sk"),
-            JoinCond("W1", "p_sk", "P", "p_id"),
-            JoinCond("P", "p_id", "W2", "p_sk"),
-            JoinCond("W2", "a_sk", "A2", "a_id"),
-        ),
-        src=ColumnRef("A1", "a_id"),
-        dst=ColumnRef("A2", "a_id"),
-    )
+    return join_query(
+        "Co-auth",
+        relations=[("A1", "author"), ("W1", "wrote"), ("P", "paper"),
+                   ("W2", "wrote"), ("A2", "author")],
+        joins=["A1.a_id == W1.a_sk", "W1.p_sk == P.p_id",
+               "P.p_id == W2.p_sk", "W2.a_sk == A2.a_id"],
+        src="A1.a_id", dst="A2.a_id")
 
 
 def authedit_query() -> JoinQuery:
-    return JoinQuery(
-        name="Auth-Edit",
-        relations=(
-            Relation("A", "author"), Relation("W", "wrote"),
-            Relation("P", "paper"), Relation("V", "venue"),
-            Relation("ED", "edits"), Relation("E", "editor"),
-        ),
-        conds=(
-            JoinCond("A", "a_id", "W", "a_sk"),
-            JoinCond("W", "p_sk", "P", "p_id"),
-            JoinCond("P", "v_sk", "V", "v_id"),
-            JoinCond("V", "v_id", "ED", "v_sk"),
-            JoinCond("ED", "e_sk", "E", "e_id"),
-        ),
-        src=ColumnRef("A", "a_id"),
-        dst=ColumnRef("E", "e_id"),
-    )
+    return join_query(
+        "Auth-Edit",
+        relations=[("A", "author"), ("W", "wrote"), ("P", "paper"),
+                   ("V", "venue"), ("ED", "edits"), ("E", "editor")],
+        joins=["A.a_id == W.a_sk", "W.p_sk == P.p_id", "P.v_sk == V.v_id",
+               "V.v_id == ED.v_sk", "ED.e_sk == E.e_id"],
+        src="A.a_id", dst="E.e_id")
 
 
 def dblp_model() -> GraphModel:
-    return GraphModel(
-        name="dblp",
-        vertices=(
-            VertexDef("Author", "author", "a_id", ("a_prop",)),
-            VertexDef("Editor", "editor", "e_id", ()),
-        ),
-        edges=(
-            EdgeDef("Co-auth", "Author", "Author", coauth_query()),
-            EdgeDef("Auth-Edit", "Author", "Editor", authedit_query()),
-        ),
-    )
+    return (GraphModel.builder("dblp")
+            .vertex("Author", table="author", id_col="a_id",
+                    props=("a_prop",))
+            .vertex("Editor", table="editor", id_col="e_id")
+            .edge("Co-auth", src="Author", dst="Author",
+                  query=coauth_query())
+            .edge("Auth-Edit", src="Author", dst="Editor",
+                  query=authedit_query())
+            .build())

@@ -12,10 +12,9 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.api.builder import join_query
 from repro.core.database import Database
-from repro.core.model import (
-    ColumnRef, EdgeDef, GraphModel, JoinCond, JoinQuery, Relation, VertexDef,
-)
+from repro.core.model import GraphModel, JoinQuery
 from repro.relational import Table
 
 
@@ -46,22 +45,13 @@ def make_imdb(scale: int = 1, seed: int = 2) -> Database:
 
 
 def _role_pair_query(name: str, role_l: str, role_r: str) -> JoinQuery:
-    return JoinQuery(
-        name=name,
-        relations=(
-            Relation("PL", "person"), Relation("RL", role_l),
-            Relation("M", "movie"), Relation("RR", role_r),
-            Relation("PR", "person"),
-        ),
-        conds=(
-            JoinCond("PL", "per_id", "RL", "per_sk"),
-            JoinCond("RL", "m_sk", "M", "m_id"),
-            JoinCond("M", "m_id", "RR", "m_sk"),
-            JoinCond("RR", "per_sk", "PR", "per_id"),
-        ),
-        src=ColumnRef("PL", "per_id"),
-        dst=ColumnRef("PR", "per_id"),
-    )
+    return join_query(
+        name,
+        relations=[("PL", "person"), ("RL", role_l), ("M", "movie"),
+                   ("RR", role_r), ("PR", "person")],
+        joins=["PL.per_id == RL.per_sk", "RL.m_sk == M.m_id",
+               "M.m_id == RR.m_sk", "RR.per_sk == PR.per_id"],
+        src="PL.per_id", dst="PR.per_id")
 
 
 def wridir_query() -> JoinQuery:
@@ -73,14 +63,13 @@ def actdir_query() -> JoinQuery:
 
 
 def imdb_model() -> GraphModel:
-    return GraphModel(
-        name="imdb",
-        vertices=(
-            VertexDef("Person", "person", "per_id", ("per_prop",)),
-            VertexDef("Movie", "movie", "m_id", ("m_year",)),
-        ),
-        edges=(
-            EdgeDef("Wri-Dir", "Person", "Person", wridir_query()),
-            EdgeDef("Act-Dir", "Person", "Person", actdir_query()),
-        ),
-    )
+    return (GraphModel.builder("imdb")
+            .vertex("Person", table="person", id_col="per_id",
+                    props=("per_prop",))
+            .vertex("Movie", table="movie", id_col="m_id",
+                    props=("m_year",))
+            .edge("Wri-Dir", src="Person", dst="Person",
+                  query=wridir_query())
+            .edge("Act-Dir", src="Person", dst="Person",
+                  query=actdir_query())
+            .build())

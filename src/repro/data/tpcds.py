@@ -23,16 +23,9 @@ from typing import Tuple
 
 import numpy as np
 
+from repro.api.builder import join_query
 from repro.core.database import Database
-from repro.core.model import (
-    ColumnRef,
-    EdgeDef,
-    GraphModel,
-    JoinCond,
-    JoinQuery,
-    Relation,
-    VertexDef,
-)
+from repro.core.model import GraphModel, JoinQuery
 from repro.relational import Table
 
 CHANNELS = ("store", "catalog", "web")
@@ -84,139 +77,97 @@ def make_tpcds(sf: int = 10, seed: int = 0) -> Database:
     return db
 
 
-def _rel(alias: str, table: str) -> Relation:
-    return Relation(alias=alias, table=table)
-
-
 def buy_query(ch: str, name: str = "Buy") -> JoinQuery:
     f = f"{ch}_sales"
-    return JoinQuery(
-        name=name,
-        relations=(_rel("C", "customer"), _rel("F", f), _rel("I", "item")),
-        conds=(
-            JoinCond("C", "c_id", "F", "c_sk"),
-            JoinCond("F", "i_sk", "I", "i_id"),
-        ),
-        src=ColumnRef("C", "c_id"),
-        dst=ColumnRef("I", "i_id"),
-    )
+    return join_query(
+        name,
+        relations=[("C", "customer"), ("F", f), ("I", "item")],
+        joins=["C.c_id == F.c_sk", "F.i_sk == I.i_id"],
+        src="C.c_id", dst="I.i_id")
 
 
 def sell_query(ch: str, name: str = "Sell") -> JoinQuery:
     f = f"{ch}_sales"
-    return JoinQuery(
-        name=name,
-        relations=(_rel("O", f"outlet_{ch}"), _rel("F", f), _rel("I", "item")),
-        conds=(
-            JoinCond("O", "o_id", "F", "o_sk"),
-            JoinCond("F", "i_sk", "I", "i_id"),
-        ),
-        src=ColumnRef("O", "o_id"),
-        dst=ColumnRef("I", "i_id"),
-    )
+    return join_query(
+        name,
+        relations=[("O", f"outlet_{ch}"), ("F", f), ("I", "item")],
+        joins=["O.o_id == F.o_sk", "F.i_sk == I.i_id"],
+        src="O.o_id", dst="I.i_id")
 
 
 def copur_query(ch: str, name: str = "Co-pur") -> JoinQuery:
     f = f"{ch}_sales"
-    return JoinQuery(
-        name=name,
-        relations=(
-            _rel("C1", "customer"), _rel("F1", f), _rel("I", "item"),
-            _rel("F2", f), _rel("C2", "customer"),
-        ),
-        conds=(
-            JoinCond("C1", "c_id", "F1", "c_sk"),
-            JoinCond("F1", "i_sk", "I", "i_id"),
-            JoinCond("I", "i_id", "F2", "i_sk"),
-            JoinCond("F2", "c_sk", "C2", "c_id"),
-        ),
-        src=ColumnRef("C1", "c_id"),
-        dst=ColumnRef("C2", "c_id"),
-    )
+    return join_query(
+        name,
+        relations=[("C1", "customer"), ("F1", f), ("I", "item"),
+                   ("F2", f), ("C2", "customer")],
+        joins=["C1.c_id == F1.c_sk", "F1.i_sk == I.i_id",
+               "I.i_id == F2.i_sk", "F2.c_sk == C2.c_id"],
+        src="C1.c_id", dst="C2.c_id")
 
 
 def samepro_query(ch: str, name: str = "Same-pro") -> JoinQuery:
     f = f"{ch}_sales"
-    return JoinQuery(
-        name=name,
-        relations=(
-            _rel("C1", "customer"), _rel("F1", f), _rel("P", "promotion"),
-            _rel("F2", f), _rel("C2", "customer"),
-        ),
-        conds=(
-            JoinCond("C1", "c_id", "F1", "c_sk"),
-            JoinCond("F1", "p_sk", "P", "p_id"),
-            JoinCond("P", "p_id", "F2", "p_sk"),
-            JoinCond("F2", "c_sk", "C2", "c_id"),
-        ),
-        src=ColumnRef("C1", "c_id"),
-        dst=ColumnRef("C2", "c_id"),
-    )
+    return join_query(
+        name,
+        relations=[("C1", "customer"), ("F1", f), ("P", "promotion"),
+                   ("F2", f), ("C2", "customer")],
+        joins=["C1.c_id == F1.c_sk", "F1.p_sk == P.p_id",
+               "P.p_id == F2.p_sk", "F2.c_sk == C2.c_id"],
+        src="C1.c_id", dst="C2.c_id")
 
 
-_VERTS = (
-    VertexDef("Customer", "customer", "c_id", ("c_prop",)),
-    VertexDef("Item", "item", "i_id", ("i_price",)),
-)
+def _base_builder(name: str):
+    return (GraphModel.builder(name)
+            .vertex("Customer", table="customer", id_col="c_id",
+                    props=("c_prop",))
+            .vertex("Item", table="item", id_col="i_id",
+                    props=("i_price",)))
 
 
 def recommendation_model(ch: str) -> GraphModel:
     """Figure 11(a): Buy + Co-pur + Same-pro for one channel."""
-    return GraphModel(
-        name=f"recommendation_{ch}",
-        vertices=_VERTS + (VertexDef("Promotion", "promotion", "p_id", ()),),
-        edges=(
-            EdgeDef("Buy", "Customer", "Item", buy_query(ch)),
-            EdgeDef("Co-pur", "Customer", "Customer", copur_query(ch)),
-            EdgeDef("Same-pro", "Customer", "Customer", samepro_query(ch)),
-        ),
-    )
+    return (_base_builder(f"recommendation_{ch}")
+            .vertex("Promotion", table="promotion", id_col="p_id")
+            .edge("Buy", src="Customer", dst="Item", query=buy_query(ch))
+            .edge("Co-pur", src="Customer", dst="Customer",
+                  query=copur_query(ch))
+            .edge("Same-pro", src="Customer", dst="Customer",
+                  query=samepro_query(ch))
+            .build())
 
 
 def fraud_model(ch: str) -> GraphModel:
     """Figure 11(b): Sell + Buy for one channel."""
-    return GraphModel(
-        name=f"fraud_{ch}",
-        vertices=_VERTS + (VertexDef("Outlet", f"outlet_{ch}", "o_id", ()),),
-        edges=(
-            EdgeDef("Sell", "Outlet", "Item", sell_query(ch)),
-            EdgeDef("Buy", "Customer", "Item", buy_query(ch)),
-        ),
-    )
+    return (_base_builder(f"fraud_{ch}")
+            .vertex("Outlet", table=f"outlet_{ch}", id_col="o_id")
+            .edge("Sell", src="Outlet", dst="Item", query=sell_query(ch))
+            .edge("Buy", src="Customer", dst="Item", query=buy_query(ch))
+            .build())
 
 
 def combined_model(rec_ch: str = "catalog", fraud_ch: str = "store") -> GraphModel:
     """Figure 16(a): recommendation(catalog) + fraud(store), 4 queries."""
-    return GraphModel(
-        name="combined",
-        vertices=_VERTS + (
-            VertexDef("Outlet", f"outlet_{fraud_ch}", "o_id", ()),
-            VertexDef("Promotion", "promotion", "p_id", ()),
-        ),
-        edges=(
-            EdgeDef("Sell", "Outlet", "Item", sell_query(fraud_ch)),
-            EdgeDef("Buy", "Customer", "Item", buy_query(fraud_ch)),
-            EdgeDef("Co-pur", "Customer", "Customer", copur_query(rec_ch)),
-            EdgeDef("Same-pro", "Customer", "Customer", samepro_query(rec_ch)),
-        ),
-    )
+    return (_base_builder("combined")
+            .vertex("Outlet", table=f"outlet_{fraud_ch}", id_col="o_id")
+            .vertex("Promotion", table="promotion", id_col="p_id")
+            .edge("Sell", src="Outlet", dst="Item", query=sell_query(fraud_ch))
+            .edge("Buy", src="Customer", dst="Item", query=buy_query(fraud_ch))
+            .edge("Co-pur", src="Customer", dst="Customer",
+                  query=copur_query(rec_ch))
+            .edge("Same-pro", src="Customer", dst="Customer",
+                  query=samepro_query(rec_ch))
+            .build())
 
 
 def getdisc_query(ch: str = "store", name: str = "Get-disc") -> JoinQuery:
     """The cyclic query of Listing 1 (star/cyclic support demo)."""
     f = f"{ch}_sales"
-    return JoinQuery(
-        name=name,
-        relations=(
-            _rel("C", "customer"), _rel("F", f), _rel("P", "promotion"),
-            _rel("I", "item"),
-        ),
-        conds=(
-            JoinCond("C", "c_id", "F", "c_sk"),
-            JoinCond("F", "i_sk", "I", "i_id"),
-            JoinCond("F", "p_sk", "P", "p_id"),
-            JoinCond("P", "p_prop", "I", "i_price"),   # cyclic closure
-        ),
-        src=ColumnRef("C", "c_id"),
-        dst=ColumnRef("I", "i_id"),
-    )
+    return join_query(
+        name,
+        relations=[("C", "customer"), ("F", f), ("P", "promotion"),
+                   ("I", "item")],
+        joins=["C.c_id == F.c_sk", "F.i_sk == I.i_id",
+               "F.p_sk == P.p_id",
+               "P.p_prop == I.i_price"],   # cyclic closure
+        src="C.c_id", dst="I.i_id")

@@ -1,35 +1,14 @@
-"""Planner/cost-model behaviour + Theorem 4.3 property tests."""
-import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+"""Planner/cost-model behaviour tests.
 
-from repro.core import Database, JoinCond, JoinQuery, Relation, ColumnRef
-from repro.core.executor import edge_output, execute_merged, execute_query
-from repro.core.jsoj import merge_queries
+Theorem 4.3 hypothesis property tests live in test_properties.py
+(optional dep).
+"""
+from repro.core import JoinCond, JoinQuery, Relation, ColumnRef
 from repro.core.planner import optimize, plan_cost, PlanUnit, ExtractionPlan
-from repro.core.shared import enumerate_shared_patterns, find_embeddings
+from repro.core.shared import enumerate_shared_patterns
 from repro.data import getdisc_query, make_tpcds, fraud_model
 from repro.core import extract_graph
 from repro.core.model import EdgeDef, GraphModel, VertexDef
-from repro.relational import Table
-
-
-def _db(rng, n_x=40, n_y=50, n_z=30, keys=8):
-    """Three tables joined X.b=Y.b, Y.c=Z.c, with duplicate keys (N-to-N)."""
-    db = Database()
-    db.add_table("X", Table.from_arrays(
-        rid=np.arange(n_x, dtype=np.int32),
-        a=np.arange(n_x, dtype=np.int32),
-        b=rng.integers(0, keys, n_x).astype(np.int32)))
-    db.add_table("Y", Table.from_arrays(
-        rid=np.arange(n_y, dtype=np.int32),
-        b=rng.integers(0, keys, n_y).astype(np.int32),
-        c=rng.integers(0, keys, n_y).astype(np.int32)))
-    db.add_table("Z", Table.from_arrays(
-        rid=np.arange(n_z, dtype=np.int32),
-        c=rng.integers(0, keys, n_z).astype(np.int32),
-        d=np.arange(n_z, dtype=np.int32)))
-    return db
 
 
 def _q(name, with_z: bool) -> JoinQuery:
@@ -50,27 +29,6 @@ def test_shared_pattern_found():
     tables = [tuple(sorted(r.table for r in p.relations))
               for p, _ in shared]
     assert ("X", "Y") in tables
-
-
-@settings(max_examples=15, deadline=None)
-@given(seed=st.integers(0, 10_000))
-def test_theorem_4_3_jsoj_equals_independent_execution(seed):
-    """Merged outer-join query reproduces both originals exactly (bag)."""
-    rng = np.random.default_rng(seed)
-    db = _db(rng)
-    q1, q2 = _q("Q1", True), _q("Q2", False)
-    shared = enumerate_shared_patterns([q1, q2])
-    pattern, embs = next(
-        (p, e) for p, e in shared
-        if tuple(sorted(r.table for r in p.relations)) == ("X", "Y"))
-    merged = merge_queries(
-        pattern, [(q1, embs["Q1"][0]), (q2, embs["Q2"][0])])
-    got = execute_merged(db, merged)
-    for q in (q1, q2):
-        res = execute_query(db, q)
-        want = edge_output(res, q.src, q.dst)
-        assert got[q.name].to_rowset() == want.to_rowset(), (
-            f"Thm 4.3 violated for {q.name} (seed {seed})")
 
 
 def test_cyclic_query_supported():

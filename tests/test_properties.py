@@ -1,0 +1,129 @@
+"""Hypothesis property tests (split out so the rest of the suite collects
+when ``hypothesis`` is absent; install via requirements-dev.txt)."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import ColumnRef, Database, JoinCond, JoinQuery, Relation
+from repro.core.executor import edge_output, execute_merged, execute_query
+from repro.core.jsoj import merge_queries
+from repro.core.shared import enumerate_shared_patterns
+from repro.kernels import ref
+from repro.kernels.sorted_probe import sorted_probe
+from repro.relational import Table, sort_merge_join
+
+
+def _np_inner(lk, rk):
+    out = []
+    for i, a in enumerate(lk):
+        for j, b in enumerate(rk):
+            if a == b:
+                out.append((i, j))
+    return out
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    keys=st.lists(st.integers(0, 40), min_size=1, max_size=200),
+    probes=st.lists(st.integers(-3, 43), min_size=1, max_size=100),
+)
+def test_sorted_probe_property(keys, probes):
+    sk = jnp.asarray(np.sort(np.array(keys, np.int32)))
+    pk = jnp.asarray(np.array(probes, np.int32))
+    lo, hi = sorted_probe(sk, pk, interpret=True)
+    rlo, rhi = ref.sorted_probe(sk, pk)
+    np.testing.assert_array_equal(np.asarray(lo), np.asarray(rlo))
+    np.testing.assert_array_equal(np.asarray(hi), np.asarray(rhi))
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    lk=st.lists(st.integers(0, 12), min_size=0, max_size=40),
+    rk=st.lists(st.integers(0, 12), min_size=0, max_size=40),
+)
+def test_property_inner_join_matches_nested_loop(lk, rk):
+    if not lk or not rk:
+        return
+    left = Table.from_arrays(k=np.array(lk, np.int32),
+                             li=np.arange(len(lk), dtype=np.int32))
+    right = Table.from_arrays(k=np.array(rk, np.int32),
+                              ri=np.arange(len(rk), dtype=np.int32))
+    out = sort_merge_join(left.prefix("L"), right.prefix("R"),
+                          on=[("L.k", "R.k")])
+    got = {(int(a), int(b)) for a, b, _ in out.to_rowset(["L.li", "R.ri"])}
+    want = set(_np_inner(lk, rk))
+    assert got == want
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    lk=st.lists(st.integers(0, 8), min_size=1, max_size=30),
+    rk=st.lists(st.integers(0, 8), min_size=1, max_size=30),
+)
+def test_property_outer_join_covers_all_left_rows(lk, rk):
+    left = Table.from_arrays(k=np.array(lk, np.int32),
+                             li=np.arange(len(lk), dtype=np.int32))
+    right = Table.from_arrays(k=np.array(rk, np.int32))
+    out = sort_merge_join(left.prefix("L"), right.prefix("R"),
+                          on=[("L.k", "R.k")], how="left_outer",
+                          indicator="m")
+    data = out.to_numpy()
+    # Theorem 4.3: no left row lost, matched rows == inner join rows
+    assert set(data["L.li"].tolist()) == set(range(len(lk)))
+    inner = sum(1 for a in lk for b in rk if a == b)
+    assert int(data["m"].sum()) == inner
+
+
+def _db(rng, n_x=40, n_y=50, n_z=30, keys=8):
+    """Three tables joined X.b=Y.b, Y.c=Z.c, with duplicate keys (N-to-N)."""
+    db = Database()
+    db.add_table("X", Table.from_arrays(
+        rid=np.arange(n_x, dtype=np.int32),
+        a=np.arange(n_x, dtype=np.int32),
+        b=rng.integers(0, keys, n_x).astype(np.int32)))
+    db.add_table("Y", Table.from_arrays(
+        rid=np.arange(n_y, dtype=np.int32),
+        b=rng.integers(0, keys, n_y).astype(np.int32),
+        c=rng.integers(0, keys, n_y).astype(np.int32)))
+    db.add_table("Z", Table.from_arrays(
+        rid=np.arange(n_z, dtype=np.int32),
+        c=rng.integers(0, keys, n_z).astype(np.int32),
+        d=np.arange(n_z, dtype=np.int32)))
+    return db
+
+
+def _q(name, with_z: bool) -> JoinQuery:
+    rels = [Relation("X", "X"), Relation("Y", "Y")]
+    conds = [JoinCond("X", "b", "Y", "b")]
+    dst = ColumnRef("Y", "c")
+    if with_z:
+        rels.append(Relation("Z", "Z"))
+        conds.append(JoinCond("Y", "c", "Z", "c"))
+        dst = ColumnRef("Z", "d")
+    return JoinQuery(name=name, relations=tuple(rels), conds=tuple(conds),
+                     src=ColumnRef("X", "a"), dst=dst)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_theorem_4_3_jsoj_equals_independent_execution(seed):
+    """Merged outer-join query reproduces both originals exactly (bag)."""
+    rng = np.random.default_rng(seed)
+    db = _db(rng)
+    q1, q2 = _q("Q1", True), _q("Q2", False)
+    shared = enumerate_shared_patterns([q1, q2])
+    pattern, embs = next(
+        (p, e) for p, e in shared
+        if tuple(sorted(r.table for r in p.relations)) == ("X", "Y"))
+    merged = merge_queries(
+        pattern, [(q1, embs["Q1"][0]), (q2, embs["Q2"][0])])
+    got = execute_merged(db, merged)
+    for q in (q1, q2):
+        res = execute_query(db, q)
+        want = edge_output(res, q.src, q.dst)
+        assert got[q.name].to_rowset() == want.to_rowset(), (
+            f"Thm 4.3 violated for {q.name} (seed {seed})")

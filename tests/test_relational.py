@@ -1,7 +1,8 @@
-"""Unit + property tests for the static-shape relational substrate."""
+"""Unit tests for the static-shape relational substrate.
+
+Hypothesis property tests live in test_properties.py (optional dep).
+"""
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.relational import (
     Table,
@@ -13,15 +14,6 @@ from repro.relational import (
     compact,
     concat,
 )
-
-
-def _np_inner(lk, rk):
-    out = []
-    for i, a in enumerate(lk):
-        for j, b in enumerate(rk):
-            if a == b:
-                out.append((i, j))
-    return out
 
 
 def test_inner_join_basic():
@@ -88,44 +80,6 @@ def test_static_capacity_path_matches_dynamic():
     stat = sort_merge_join(left, right, on=[("L.k", "R.k")],
                            capacity=max(8, n))
     assert dyn.to_rowset() == stat.to_rowset()
-
-
-@settings(max_examples=60, deadline=None)
-@given(
-    lk=st.lists(st.integers(0, 12), min_size=0, max_size=40),
-    rk=st.lists(st.integers(0, 12), min_size=0, max_size=40),
-)
-def test_property_inner_join_matches_nested_loop(lk, rk):
-    if not lk or not rk:
-        return
-    left = Table.from_arrays(k=np.array(lk, np.int32),
-                             li=np.arange(len(lk), dtype=np.int32))
-    right = Table.from_arrays(k=np.array(rk, np.int32),
-                              ri=np.arange(len(rk), dtype=np.int32))
-    out = sort_merge_join(left.prefix("L"), right.prefix("R"),
-                          on=[("L.k", "R.k")])
-    got = {(int(a), int(b)) for a, b, _ in out.to_rowset(["L.li", "R.ri"])}
-    want = set(_np_inner(lk, rk))
-    assert got == want
-
-
-@settings(max_examples=40, deadline=None)
-@given(
-    lk=st.lists(st.integers(0, 8), min_size=1, max_size=30),
-    rk=st.lists(st.integers(0, 8), min_size=1, max_size=30),
-)
-def test_property_outer_join_covers_all_left_rows(lk, rk):
-    left = Table.from_arrays(k=np.array(lk, np.int32),
-                             li=np.arange(len(lk), dtype=np.int32))
-    right = Table.from_arrays(k=np.array(rk, np.int32))
-    out = sort_merge_join(left.prefix("L"), right.prefix("R"),
-                          on=[("L.k", "R.k")], how="left_outer",
-                          indicator="m")
-    data = out.to_numpy()
-    # Theorem 4.3: no left row lost, matched rows == inner join rows
-    assert set(data["L.li"].tolist()) == set(range(len(lk)))
-    inner = sum(1 for a in lk for b in rk if a == b)
-    assert int(data["m"].sum()) == inner
 
 
 def test_semi_join_mask():
