@@ -4,22 +4,23 @@ from __future__ import annotations
 from benchmarks.common import SFS, Row, emit, time_call
 from repro.core import GraphModel, extract_graph
 from repro.data import make_tpcds
-from repro.data.tpcds import copur_query, samepro_query, _VERTS
-from repro.core.model import EdgeDef
+from repro.data.tpcds import copur_query, samepro_query
 
 
 def run() -> list:
     rows: list[Row] = []
     sf = max(SFS)
     db = make_tpcds(sf=sf, seed=0)
-    model = GraphModel(
-        name="jsmv_micro",
-        vertices=_VERTS,
-        edges=(
-            EdgeDef("Co-pur", "Customer", "Customer", copur_query("store")),
-            EdgeDef("Same-pro", "Customer", "Customer",
-                    samepro_query("store")),
-        ),
+    model = (
+        GraphModel.builder("jsmv_micro")
+        .vertex("Customer", table="customer", id_col="c_id",
+                props=("c_prop",))
+        .vertex("Item", table="item", id_col="i_id", props=("i_price",))
+        .edge("Co-pur", src="Customer", dst="Customer",
+              query=copur_query("store"))
+        .edge("Same-pro", src="Customer", dst="Customer",
+              query=samepro_query("store"))
+        .build()
     )
     t_base = time_call(lambda: extract_graph(db, model, method="ringo"))
     t_mv = time_call(lambda: extract_graph(db, model, method="extgraph-mv"))

@@ -1,22 +1,28 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
+#
+#   python -m benchmarks.run                 # every module, CSV to stdout only
+#   python -m benchmarks.run --all           # CSV + every BENCH_*.json artifact
+#   python -m benchmarks.run --only engine_warm_vs_cold,graph_analytics
+import argparse
+import os
 import sys
 import traceback
 
 
-def main() -> None:
+def modules():
     from benchmarks import (
         bench_breakdown,
         bench_engine,
         bench_fraud,
+        bench_graph,
         bench_jsmv_micro,
         bench_jsoj_micro,
         bench_kernels,
         bench_real,
         bench_recommendation,
     )
-    from benchmarks.common import emit
 
-    modules = [
+    return [
         ("fig5c_jsoj_micro", bench_jsoj_micro),
         ("fig6c_jsmv_micro", bench_jsmv_micro),
         ("fig14_recommendation", bench_recommendation),
@@ -24,17 +30,56 @@ def main() -> None:
         ("table3_real", bench_real),
         ("fig16_breakdown", bench_breakdown),
         ("engine_warm_vs_cold", bench_engine),
+        ("graph_analytics", bench_graph),
         ("kernels", bench_kernels),
     ]
+
+
+def main(argv=None) -> None:
+    parser = argparse.ArgumentParser(
+        description="Run the paper-figure benchmark suite (CSV on stdout).")
+    parser.add_argument(
+        "--all", action="store_true",
+        help="also write the BENCH_*.json trajectory artifacts "
+             "(bench_engine / bench_graph); without it only the CSV is "
+             "emitted")
+    parser.add_argument(
+        "--only", default=None, metavar="NAMES",
+        help="comma-separated subset of module names to run")
+    args = parser.parse_args(argv)
+
+    from benchmarks.common import emit
+
+    selected = modules()
+    if args.only:
+        wanted = {n.strip() for n in args.only.split(",")}
+        unknown = wanted - {n for n, _ in selected}
+        if unknown:
+            raise SystemExit(
+                f"unknown modules {sorted(unknown)}; "
+                f"have {[n for n, _ in selected]}")
+        selected = [(n, m) for n, m in selected if n in wanted]
+
     print("name,us_per_call,derived")
     failed = 0
-    for name, mod in modules:
+    artifacts = []
+    for name, mod in selected:
+        json_path = getattr(mod, "JSON_PATH", None)
+        if json_path and not args.all:
+            mod.JSON_PATH = os.devnull     # CSV-only run: suppress artifact
         try:
             emit(mod.run())
+            if json_path and args.all:
+                artifacts.append(json_path)
         except Exception:
             failed += 1
             print(f"{name},nan,ERROR", flush=True)
             traceback.print_exc(file=sys.stderr)
+        finally:
+            if json_path:
+                mod.JSON_PATH = json_path
+    if artifacts:
+        print("# artifacts: " + " ".join(artifacts), file=sys.stderr)
     if failed:
         raise SystemExit(f"{failed} benchmark modules failed")
 

@@ -1,6 +1,7 @@
 """Quickstart: build a graph model with the fluent builder, open an
-ExtractionEngine session over TPC-DS, and watch the second request hit the
-plan cache and reuse the materialized view built by the first.
+ExtractionEngine session over TPC-DS, watch the second request hit the
+plan cache and reuse the materialized view built by the first, then run
+graph analytics on the extracted graph without leaving the session.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -8,10 +9,11 @@ import sys
 
 sys.path.insert(0, "src")
 
+import numpy as np                                                      # noqa: E402
+
 from repro.api import ExtractionEngine, model_to_spec                   # noqa: E402
 from repro.core import GraphModel, plan_cost                            # noqa: E402
 from repro.data import make_tpcds                                       # noqa: E402
-from repro.graph import build_csr                                       # noqa: E402
 
 
 def recommendation_model() -> GraphModel:
@@ -44,9 +46,9 @@ def recommendation_model() -> GraphModel:
     )
 
 
-def main():
-    print("== 1. synthesize a TPC-DS-shaped database (SF=2) ==")
-    db = make_tpcds(sf=2, seed=0)
+def main(sf: int = 2):
+    print(f"== 1. synthesize a TPC-DS-shaped database (SF={sf}) ==")
+    db = make_tpcds(sf=sf, seed=0)
     for name, st in sorted(db.stats.items()):
         print(f"   {name:<16} {st.rows:>8} rows")
 
@@ -77,9 +79,22 @@ def main():
     print(f"   edges={sizes}")
     print(f"   warm speedup: {r1.timings.total_s / r2.timings.total_s:.2f}x")
 
-    print("\n== 6. build the CSR graph ==")
-    csr = build_csr(r2.graph, model)
+    print("\n== 6. analytics without leaving the session ==")
+    csr = r2.graph_view()
     print(f"   vertices={csr.num_vertices}  edge_counts={csr.edge_counts}")
+    pr = engine.analyze(model, algorithm="pagerank", label="Buy", iters=15)
+    assert pr.provenance.csr_cache_hit, "graph_view already built this CSR"
+    ranks = np.asarray(pr.values)
+    lo, hi = csr.vertex_ranges["Item"]
+    top = lo + np.argsort(ranks[lo:hi])[::-1][:3]
+    ids = np.asarray(csr.vertex_ids)
+    print(f"   pagerank (csr_cache_hit={pr.provenance.csr_cache_hit}, "
+          f"analyze {pr.timings.analyze_s:.3f}s)")
+    for v in top:
+        print(f"   hot item id={int(ids[v])}  rank={ranks[v]:.5f}")
+    wcc = engine.analyze(model, algorithm="wcc")
+    n_comp = len(np.unique(np.asarray(wcc.values)))
+    print(f"   weakly connected components: {n_comp}")
 
 
 if __name__ == "__main__":

@@ -10,6 +10,9 @@ from repro.api.builder import (
     model_to_spec,
 )
 from repro.api.engine import (
+    AnalyticsProvenance,
+    AnalyticsResult,
+    AnalyticsTimings,
     ExtractionEngine,
     ExtractionResult,
     PlanProvenance,
@@ -19,6 +22,9 @@ __all__ = [
     "ExtractionEngine",
     "ExtractionResult",
     "PlanProvenance",
+    "AnalyticsProvenance",
+    "AnalyticsResult",
+    "AnalyticsTimings",
     "GraphModelBuilder",
     "join_query",
     "model_from_spec",

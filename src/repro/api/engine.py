@@ -21,9 +21,12 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
 
 import jax
+
+if TYPE_CHECKING:  # pragma: no cover - annotation-only
+    from repro.graph import CSRGraph
 
 from repro.core.database import Database, Fingerprint, TableStats
 from repro.core.extract import (
@@ -61,6 +64,11 @@ class ExtractionResult:
     timings: Timings
     provenance: PlanProvenance
     plan: Optional[ExtractionPlan] = None
+    model: Optional[GraphModel] = None
+    _engine: Optional["ExtractionEngine"] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _csr: Optional["CSRGraph"] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def vertices(self) -> Dict[str, Table]:
@@ -69,6 +77,59 @@ class ExtractionResult:
     @property
     def edges(self) -> Dict[str, Table]:
         return self.graph.edges
+
+    def graph_view(self, use_kernel: bool = False) -> "CSRGraph":
+        """The extracted graph as a :class:`repro.graph.CSRGraph`.
+
+        Memoized on the result; results produced by an engine additionally
+        consult the engine's content-addressed CSR cache, so a warm session
+        converts each distinct graph exactly once.
+        """
+        if self.model is None:
+            raise ValueError(
+                "graph_view() needs the originating GraphModel; this result "
+                "was built without one")
+        if self._csr is None:
+            if self._engine is not None:
+                self._csr, _, _ = self._engine._csr_for(
+                    self, use_kernel=use_kernel)
+            else:
+                from repro.graph import build_csr
+                self._csr = build_csr(self.graph, self.model,
+                                      use_kernel=use_kernel)
+        return self._csr
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalyticsProvenance:
+    """Where an ``engine.analyze()`` answer came from."""
+
+    algorithm: str
+    extraction: PlanProvenance
+    csr_cache_hit: bool = False   # True -> the CSR was NOT rebuilt
+    csr_key: str = ""             # content address of the extracted graph
+
+
+@dataclasses.dataclass
+class AnalyticsTimings:
+    extract_s: float = 0.0     # full extraction request (plan + exec)
+    csr_build_s: float = 0.0   # 0-ish on a CSR cache hit
+    analyze_s: float = 0.0     # jitted algorithm loop
+
+    @property
+    def total_s(self) -> float:
+        return self.extract_s + self.csr_build_s + self.analyze_s
+
+
+@dataclasses.dataclass
+class AnalyticsResult:
+    """Algorithm output + the extraction it ran over."""
+
+    values: object                 # array or dict of arrays (per algorithm)
+    csr: "CSRGraph"
+    extraction: ExtractionResult
+    provenance: AnalyticsProvenance
+    timings: AnalyticsTimings
 
 
 @dataclasses.dataclass
@@ -101,22 +162,28 @@ class ExtractionEngine:
     """
 
     def __init__(self, db: Database, max_plans: int = 128,
-                 max_views: int = 32):
+                 max_views: int = 32, max_csrs: int = 16):
         self.db = db
         self.max_plans = max_plans
         self.max_views = max_views
+        self.max_csrs = max_csrs
         self._plans: "collections.OrderedDict[Tuple, ExtractionPlan]" = \
             collections.OrderedDict()
         self._views: "collections.OrderedDict[Signature, _CachedView]" = \
+            collections.OrderedDict()
+        # CSR conversions, content-addressed by graph fingerprint
+        self._csrs: "collections.OrderedDict[str, CSRGraph]" = \
             collections.OrderedDict()
 
     # -- cache bookkeeping ---------------------------------------------------
     def clear(self) -> None:
         self._plans.clear()
         self._views.clear()
+        self._csrs.clear()
 
     def cache_info(self) -> Dict[str, int]:
-        return {"plans": len(self._plans), "views": len(self._views)}
+        return {"plans": len(self._plans), "views": len(self._views),
+                "csrs": len(self._csrs)}
 
     def _table_fingerprint(self, table: str) -> Optional[Fingerprint]:
         st = self.db.stats.get(table)
@@ -210,4 +277,85 @@ class ExtractionEngine:
         graph = ExtractedGraph(vertices=vertices, edges=edges)
         graph.block_until_ready()
         return ExtractionResult(graph=graph, timings=timings,
-                                provenance=provenance, plan=plan)
+                                provenance=provenance, plan=plan,
+                                model=model, _engine=self)
+
+    # -- analytics -----------------------------------------------------------
+    def _csr_for(self, result: ExtractionResult, use_kernel: bool = False
+                 ) -> Tuple["CSRGraph", bool, str]:
+        """CSR for a result's graph via the content-addressed cache.
+
+        Returns ``(csr, cache_hit, content_key)``; a hit means the graph
+        was extracted before (by any model/method that produced identical
+        tables) and no rebuild happened.  ``use_kernel`` only selects the
+        build path on a miss — the resulting CSR is identical either way,
+        so the cache is keyed by content alone.
+        """
+        from repro.graph import build_csr
+
+        fp = result.graph.fingerprint()
+        csr = self._csrs.get(fp)
+        hit = csr is not None
+        if hit:
+            self._csrs.move_to_end(fp)
+        else:
+            csr = build_csr(result.graph, result.model,
+                            use_kernel=bool(use_kernel))
+            self._csrs[fp] = csr
+            while len(self._csrs) > self.max_csrs:
+                self._csrs.popitem(last=False)
+        return csr, hit, fp
+
+    def analyze(self, model: GraphModel, algorithm: str = "pagerank",
+                method: str = "extgraph", use_kernel: Optional[bool] = None,
+                verbose: bool = False, **params) -> AnalyticsResult:
+        """Extract (cache-warm) and run a graph algorithm in one call.
+
+        ``algorithm`` is a key of :data:`repro.graph.ALGORITHMS`
+        (``pagerank`` / ``wcc`` / ``khop`` / ``degree_stats``); extra
+        ``params`` are forwarded (e.g. ``iters=``, ``label=``, ``seeds=``).
+        ``use_kernel=None`` auto-selects: Pallas kernels on TPU, their jnp
+        references elsewhere (interpret-mode Pallas is emulation, not a
+        fast path).  A warm engine serves this without re-planning, view
+        re-materialization, or CSR rebuild (join execution and the graph
+        content digest still run per request, against the snapshot) — see
+        the returned provenance and per-phase timings.
+        """
+        from repro.graph.algorithms import ALGORITHMS
+        from repro.kernels.ops import resolve_use_kernel
+
+        if algorithm not in ALGORITHMS:
+            raise ValueError(
+                f"unknown algorithm {algorithm!r}; "
+                f"have {sorted(ALGORITHMS)}")
+        use_kernel = resolve_use_kernel(use_kernel)
+
+        t0 = time.perf_counter()
+        result = self.extract(model, method=method, verbose=verbose)
+        extract_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        csr, csr_hit, csr_key = self._csr_for(result, use_kernel=use_kernel)
+        result._csr = csr
+        jax.block_until_ready(csr.vertex_ids)
+        csr_build_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        values = ALGORITHMS[algorithm](csr, use_kernel=use_kernel, **params)
+        jax.block_until_ready(values)
+        analyze_s = time.perf_counter() - t0
+
+        return AnalyticsResult(
+            values=values,
+            csr=csr,
+            extraction=result,
+            provenance=AnalyticsProvenance(
+                algorithm=algorithm,
+                extraction=result.provenance,
+                csr_cache_hit=csr_hit,
+                csr_key=csr_key),
+            timings=AnalyticsTimings(
+                extract_s=extract_s,
+                csr_build_s=csr_build_s,
+                analyze_s=analyze_s),
+        )

@@ -51,6 +51,24 @@ class ExtractedGraph:
             jax.block_until_ready(t.valid)
         return self
 
+    def fingerprint(self) -> str:
+        """Content address over all vertex/edge tables (valid rows only).
+
+        Two extractions that produced the same graph — whatever model,
+        method, or plan got them there — share a fingerprint, which is
+        what lets the engine's CSR cache skip the rebuild.
+        """
+        import hashlib
+
+        from repro.relational.ops import table_digest
+
+        h = hashlib.sha1()
+        for kind, tables in (("v", self.vertices), ("e", self.edges)):
+            for label in sorted(tables):
+                h.update(f"{kind}:{label}:".encode())
+                h.update(table_digest(tables[label]).encode())
+        return h.hexdigest()[:16]
+
 
 @dataclasses.dataclass
 class Timings:

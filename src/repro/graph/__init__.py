@@ -1,3 +1,25 @@
-from repro.graph.csr import CSRGraph, build_csr, csr_offsets, pagerank
+from repro.graph.csr import (
+    CSRGraph,
+    build_csr,
+    csr_offsets,
+    triangle_hint_degree,
+)
+from repro.graph.algorithms import (
+    ALGORITHMS,
+    degree_stats,
+    khop,
+    pagerank,
+    wcc,
+)
 
-__all__ = ["CSRGraph", "build_csr", "csr_offsets", "pagerank"]
+__all__ = [
+    "CSRGraph",
+    "build_csr",
+    "csr_offsets",
+    "triangle_hint_degree",
+    "ALGORITHMS",
+    "pagerank",
+    "wcc",
+    "khop",
+    "degree_stats",
+]

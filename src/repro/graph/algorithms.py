@@ -1,0 +1,199 @@
+"""Graph algorithms over :class:`CSRGraph`, as jitted loops over the
+Pallas edge kernels (``edge_spmv`` / ``edge_min_label`` /
+``frontier_expand`` in :mod:`repro.kernels`).
+
+Every algorithm takes the COO view of one edge label (or the union of all
+labels), runs a fixed-shape iteration under ``jax.jit``, and is registered
+in :data:`ALGORITHMS` so :meth:`repro.api.ExtractionEngine.analyze` can
+dispatch by name.  ``use_kernel`` selects the compute path: ``None``
+(default) auto-picks — Pallas kernels on TPU, their pure-jnp oracles from
+:mod:`repro.kernels.ref` elsewhere (interpret-mode Pallas is emulation,
+not a fast path); ``True``/``False`` force it.  Both paths have
+bit-identical semantics; the numpy ground truth lives in
+:mod:`repro.graph.reference`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.csr import CSRGraph
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+_resolve_kernel = kops.resolve_use_kernel
+
+
+def _spmv(src, dst, valid, x, n, use_kernel):
+    if use_kernel:
+        return kops.edge_spmv(src, dst, valid, x, n)
+    return kref.edge_spmv(src, dst, valid, x, n)
+
+
+def _min_label(src, dst, valid, labels, n, use_kernel):
+    if use_kernel:
+        return kops.edge_min_label(src, dst, valid, labels, n)
+    return kref.edge_min_label(src, dst, valid, labels, n)
+
+
+def _expand(src, dst, valid, frontier, visited, n, use_kernel):
+    if use_kernel:
+        return kops.frontier_expand(src, dst, valid, frontier, visited, n)
+    return kref.frontier_expand(src, dst, valid, frontier, visited, n)
+
+
+def _out_degree(src, valid, n, use_kernel):
+    if use_kernel:
+        return kops.segment_counts(src, valid, n)
+    return kref.segment_counts(jnp.maximum(src, 0), valid, n)
+
+
+# -- PageRank ---------------------------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_vertices", "iters", "use_kernel"))
+def _pagerank_loop(src, dst, valid, num_vertices: int, iters: int,
+                   damp: float, use_kernel: bool):
+    n = num_vertices
+    deg = _out_degree(src, valid, n, use_kernel).astype(jnp.float32)
+
+    def step(r, _):
+        contrib = jnp.where(deg > 0, r / jnp.maximum(deg, 1.0), 0.0)
+        agg = _spmv(src, dst, valid, contrib, n, use_kernel)
+        dangling = jnp.sum(jnp.where(deg > 0, 0.0, r))
+        r_new = (1.0 - damp) / n + damp * (agg + dangling / n)
+        return r_new, None
+
+    r0 = jnp.full((n,), 1.0 / n, jnp.float32)
+    r, _ = jax.lax.scan(step, r0, None, length=iters)
+    return r
+
+
+def pagerank(csr: CSRGraph, label: Optional[str] = None, iters: int = 20,
+             damp: float = 0.85,
+             use_kernel: Optional[bool] = None) -> jax.Array:
+    """Power-iteration PageRank (dangling mass redistributed uniformly)."""
+    src, dst, valid = csr.coo(label)
+    return _pagerank_loop(src, dst, valid, csr.num_vertices, int(iters),
+                          float(damp), _resolve_kernel(use_kernel))
+
+
+# -- Weakly connected components --------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_vertices", "max_iters", "use_kernel"))
+def _wcc_loop(src, dst, valid, num_vertices: int, max_iters: int,
+              use_kernel: bool):
+    n = num_vertices
+
+    def cond(state):
+        _, changed, it = state
+        return changed & (it < max_iters)
+
+    def body(state):
+        labels, _, it = state
+        new = _min_label(src, dst, valid, labels, n, use_kernel)
+        return new, jnp.any(new != labels), it + 1
+
+    labels0 = jnp.arange(n, dtype=jnp.int32)
+    labels, _, iters = jax.lax.while_loop(
+        cond, body, (labels0, jnp.bool_(True), jnp.int32(0)))
+    return labels, iters
+
+
+def wcc(csr: CSRGraph, label: Optional[str] = None,
+        max_iters: Optional[int] = None,
+        use_kernel: Optional[bool] = None) -> jax.Array:
+    """Weakly connected components: min-label propagation to fixed point.
+
+    Returns per-vertex component labels — the smallest dense vertex index
+    in each component.  Edge direction is ignored (both directions
+    propagate).
+    """
+    src, dst, valid = csr.coo(label, symmetric=True)
+    if max_iters is None:
+        max_iters = max(csr.num_vertices, 1)
+    labels, _ = _wcc_loop(src, dst, valid, csr.num_vertices, int(max_iters),
+                          _resolve_kernel(use_kernel))
+    return labels
+
+
+# -- k-hop neighborhoods -----------------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_vertices", "k", "use_kernel"))
+def _khop_loop(src, dst, valid, seed_mask, num_vertices: int, k: int,
+               use_kernel: bool):
+    n = num_vertices
+    dist0 = jnp.where(seed_mask, 0, -1).astype(jnp.int32)
+
+    def body(i, state):
+        dist, frontier, visited = state
+        nxt = _expand(src, dst, valid, frontier, visited, n, use_kernel)
+        dist = jnp.where(nxt, i + 1, dist)
+        return dist, nxt, visited | nxt
+
+    dist, _, _ = jax.lax.fori_loop(
+        0, k, body, (dist0, seed_mask, seed_mask))
+    return dist
+
+
+def khop(csr: CSRGraph, seeds: Union[jax.Array, Sequence[int]], k: int = 2,
+         label: Optional[str] = None,
+         use_kernel: Optional[bool] = None) -> jax.Array:
+    """BFS hop distance from ``seeds``, truncated at ``k``.
+
+    ``seeds`` is a bool mask over dense vertex indices or an index array.
+    Returns int32 distances; ``-1`` marks vertices unreached within k hops.
+    """
+    src, dst, valid = csr.coo(label)
+    n = csr.num_vertices
+    seeds = jnp.asarray(seeds)
+    if seeds.dtype == jnp.bool_:
+        seed_mask = seeds
+    else:
+        seed_mask = jnp.zeros((n,), bool).at[seeds.astype(jnp.int32)].set(True)
+    return _khop_loop(src, dst, valid, seed_mask, n, int(k),
+                      _resolve_kernel(use_kernel))
+
+
+# -- degree statistics -------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("num_vertices", "use_kernel"))
+def _degree_stats_jit(src, dst, valid, num_vertices: int, use_kernel: bool):
+    n = num_vertices
+    out_deg = _out_degree(src, valid, n, use_kernel)
+    in_deg = _out_degree(jnp.maximum(dst, 0), valid & (dst >= 0), n,
+                         use_kernel)
+    num_edges = jnp.sum(valid.astype(jnp.int32))
+    return {
+        "out_degree": out_deg,
+        "in_degree": in_deg,
+        "num_edges": num_edges,
+        "max_out_degree": jnp.max(out_deg),
+        "max_in_degree": jnp.max(in_deg),
+        "mean_degree": num_edges / jnp.maximum(n, 1),
+        "isolated": jnp.sum(((out_deg + in_deg) == 0).astype(jnp.int32)),
+    }
+
+
+def degree_stats(csr: CSRGraph, label: Optional[str] = None,
+                 use_kernel: Optional[bool] = None) -> Dict[str, jax.Array]:
+    """Out/in degree arrays + summary scalars over the chosen edges."""
+    src, dst, valid = csr.coo(label)
+    return _degree_stats_jit(src, dst, valid, csr.num_vertices,
+                             _resolve_kernel(use_kernel))
+
+
+# -- registry (engine.analyze dispatches through this) -----------------------
+
+ALGORITHMS: Dict[str, Callable] = {
+    "pagerank": pagerank,
+    "wcc": wcc,
+    "khop": khop,
+    "degree_stats": degree_stats,
+}

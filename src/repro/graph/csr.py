@@ -5,11 +5,16 @@ each vertex label owns a contiguous index range, edge endpoints are remapped
 from user ids to dense indices with a sorted-id binary search, and row
 offsets come from a histogram + exclusive scan (the classic GPU/TPU CSR
 build; the Pallas ``segment_csr`` kernel accelerates the histogram on TPU).
+
+Alongside offsets/targets the builder keeps the source index per edge (COO
+view, sorted by source), which is what the Pallas edge kernels in
+:mod:`repro.kernels` consume directly — see :mod:`repro.graph.algorithms`
+for PageRank / WCC / k-hop built on top.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,18 +27,90 @@ from repro.relational import Table
 
 @dataclasses.dataclass
 class CSRGraph:
-    """Directed multigraph in CSR, vertices packed label-by-label."""
+    """Directed multigraph in CSR, vertices packed label-by-label.
+
+    Per edge label, ``offsets[label]`` is the (V+1,) row-pointer array and
+    ``targets[label]`` the column index sorted by source; ``sources[label]``
+    carries the source index per edge (same order), so every edge label is
+    simultaneously available as CSR and COO.  Invalid (padding) slots hold
+    ``-1`` in both ``sources`` and ``targets``.
+    """
 
     num_vertices: int
     vertex_ranges: Dict[str, Tuple[int, int]]      # label -> [start, end)
     vertex_ids: jax.Array                          # dense idx -> original id
     offsets: Dict[str, jax.Array]                  # edge label -> (V+1,)
     targets: Dict[str, jax.Array]                  # edge label -> (E,)
+    sources: Dict[str, jax.Array]                  # edge label -> (E,)
     edge_counts: Dict[str, int]
 
     def out_degree(self, label: str) -> jax.Array:
         off = self.offsets[label]
         return off[1:] - off[:-1]
+
+    def in_degree(self, label: str,
+                  use_kernel: Optional[bool] = None) -> jax.Array:
+        """Histogram of targets (no transpose needed)."""
+        from repro.kernels import ops as kops
+        from repro.kernels import ref as kref
+        tgt = jnp.maximum(self.targets[label], 0)
+        valid = self.edge_valid(label)
+        if kops.resolve_use_kernel(use_kernel):
+            return kops.segment_counts(tgt, valid, self.num_vertices)
+        return kref.segment_counts(tgt, valid, self.num_vertices)
+
+    def edge_valid(self, label: str) -> jax.Array:
+        return self.targets[label] >= 0
+
+    def coo(self, labels: Optional[Sequence[str]] = None,
+            symmetric: bool = False
+            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """(src, dst, valid) over the chosen edge labels, concatenated.
+
+        ``symmetric=True`` appends every edge reversed — the undirected
+        view WCC propagates over.
+        """
+        labels = self._labels(labels)
+        src = jnp.concatenate([self.sources[l] for l in labels])
+        dst = jnp.concatenate([self.targets[l] for l in labels])
+        valid = (src >= 0) & (dst >= 0)
+        if symmetric:
+            src, dst = (jnp.concatenate([src, dst]),
+                        jnp.concatenate([dst, src]))
+            valid = jnp.concatenate([valid, valid])
+        return src, dst, valid
+
+    def _labels(self, labels: Optional[Sequence[str]] = None) -> Tuple[str, ...]:
+        if labels is None:
+            return tuple(sorted(self.targets))
+        if isinstance(labels, str):
+            labels = (labels,)
+        missing = [l for l in labels if l not in self.targets]
+        if missing:
+            raise KeyError(f"unknown edge labels {missing}; "
+                           f"have {sorted(self.targets)}")
+        return tuple(labels)
+
+    def transpose(self, use_kernel: bool = False) -> "CSRGraph":
+        """Reverse every edge label (src <-> dst); vertex numbering shared."""
+        offsets: Dict[str, jax.Array] = {}
+        targets: Dict[str, jax.Array] = {}
+        sources: Dict[str, jax.Array] = {}
+        for label in self.targets:
+            src, dst = self.sources[label], self.targets[label]
+            valid = self.edge_valid(label)
+            off, tgt, srt = _coo_to_csr(dst, src, valid, self.num_vertices,
+                                        use_kernel=use_kernel)
+            offsets[label], targets[label], sources[label] = off, tgt, srt
+        return CSRGraph(
+            num_vertices=self.num_vertices,
+            vertex_ranges=self.vertex_ranges,
+            vertex_ids=self.vertex_ids,
+            offsets=offsets,
+            targets=targets,
+            sources=sources,
+            edge_counts=dict(self.edge_counts),
+        )
 
 
 def _dense_remap(ids: jax.Array, sorted_ids: jax.Array, base: int) -> jax.Array:
@@ -55,6 +132,20 @@ def csr_offsets(dst_rows: jax.Array, valid: jax.Array, num_vertices: int,
         [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts).astype(jnp.int32)])
 
 
+def _coo_to_csr(src: jax.Array, dst: jax.Array, valid: jax.Array,
+                num_vertices: int, use_kernel: bool = False
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Sort COO edges by source; -1-pad invalid slots (kept at the tail)."""
+    off = csr_offsets(jnp.maximum(src, 0), valid, num_vertices,
+                      use_kernel=use_kernel)
+    order = jnp.argsort(jnp.where(valid, src, jnp.int32(2**31 - 1)),
+                        stable=True)
+    keep = valid[order]
+    tgt = jnp.where(keep, dst[order], -1)
+    srt = jnp.where(keep, src[order], -1)
+    return off, tgt, srt
+
+
 def build_csr(
     graph: ExtractedGraph,
     model: GraphModel,
@@ -74,10 +165,11 @@ def build_csr(
         base += len(ids)
     vertex_ids = jnp.asarray(np.concatenate(id_chunks))
 
-    # 2. per-edge-label CSR
+    # 2. per-edge-label CSR (+ COO sources)
     by_label = {e.label: e for e in model.edges}
     offsets: Dict[str, jax.Array] = {}
     targets: Dict[str, jax.Array] = {}
+    sources: Dict[str, jax.Array] = {}
     counts: Dict[str, int] = {}
     for label in sorted(graph.edges):
         t = graph.edges[label]
@@ -86,13 +178,13 @@ def build_csr(
         dst_sorted = jnp.asarray(sorted_ids[edef.dst_label])
         src = _dense_remap(t["src"], src_sorted, ranges[edef.src_label][0])
         dst = _dense_remap(t["dst"], dst_sorted, ranges[edef.dst_label][0])
-        off = csr_offsets(src, t.valid, base, use_kernel=use_kernel)
-        # bucket-sort edges by source to fill targets
-        order = jnp.argsort(jnp.where(t.valid, src, jnp.int32(2**31 - 1)))
+        off, tgt, srt = _coo_to_csr(src, dst, t.valid, base,
+                                    use_kernel=use_kernel)
         n_edges = int(t.num_rows())
-        targets[label] = jnp.where(
-            jnp.arange(t.capacity) < n_edges, dst[order], -1)[:max(n_edges, 1)]
+        cap = max(n_edges, 1)
         offsets[label] = off
+        targets[label] = tgt[:cap]
+        sources[label] = srt[:cap]
         counts[label] = n_edges
     return CSRGraph(
         num_vertices=base,
@@ -100,30 +192,9 @@ def build_csr(
         vertex_ids=vertex_ids,
         offsets=offsets,
         targets=targets,
+        sources=sources,
         edge_counts=counts,
     )
-
-
-# -- reference graph algorithms over the CSR (examples / analytics demos) ----
-
-def pagerank(csr: CSRGraph, label: str, iters: int = 20,
-             damp: float = 0.85) -> jax.Array:
-    """Power-iteration PageRank over one edge label (jit-able)."""
-    off, tgt = csr.offsets[label], csr.targets[label]
-    n = csr.num_vertices
-    deg = (off[1:] - off[:-1]).astype(jnp.float32)
-    src_of_edge = jnp.searchsorted(
-        off, jnp.arange(tgt.shape[0], dtype=jnp.int32), side="right") - 1
-
-    def step(r, _):
-        contrib = r[src_of_edge] / jnp.maximum(deg[src_of_edge], 1.0)
-        contrib = jnp.where(tgt >= 0, contrib, 0.0)
-        agg = jnp.zeros((n,), jnp.float32).at[jnp.maximum(tgt, 0)].add(contrib)
-        return (1 - damp) / n + damp * agg, None
-
-    r0 = jnp.full((n,), 1.0 / n, jnp.float32)
-    r, _ = jax.lax.scan(step, r0, None, length=iters)
-    return r
 
 
 def triangle_hint_degree(csr: CSRGraph, label: str) -> jax.Array:

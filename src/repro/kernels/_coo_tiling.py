@@ -1,0 +1,29 @@
+"""Shared tiling prologue for the COO edge kernels (spmv / label_prop /
+frontier): pad edge arrays to a whole number of TILE-sized input blocks,
+round the vertex axis up to SEG_BLOCK, and derive the 2-D accumulate grid.
+
+Padding sentinels: ``src`` pads with 0 (always a safe gather index),
+``dst`` pads with -1 (never lands in any segment block), ``valid`` pads
+False — all three kernels rely on exactly this convention.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def pad_coo(src: jax.Array, dst: jax.Array, valid: jax.Array,
+            num_vertices: int, tile: int, seg_block: int
+            ) -> Tuple[jax.Array, jax.Array, jax.Array, Tuple[int, int], int]:
+    """Returns ``(src, dst, valid, grid, s_pad)`` ready for ``pallas_call``."""
+    n = src.shape[0]
+    n_pad = ((n + tile - 1) // tile) * tile
+    s_pad = ((num_vertices + seg_block - 1) // seg_block) * seg_block
+    src_p = jnp.pad(src.astype(jnp.int32), (0, n_pad - n), constant_values=0)
+    dst_p = jnp.pad(dst.astype(jnp.int32), (0, n_pad - n),
+                    constant_values=-1)
+    valid_p = jnp.pad(valid, (0, n_pad - n), constant_values=False)
+    grid = (s_pad // seg_block, n_pad // tile)
+    return src_p, dst_p, valid_p, grid, s_pad

@@ -8,12 +8,22 @@ from __future__ import annotations
 import jax
 
 from repro.kernels import bloom as _bloom
+from repro.kernels import frontier as _frontier
+from repro.kernels import label_prop as _label_prop
 from repro.kernels import segment_csr as _segment_csr
 from repro.kernels import sorted_probe as _sorted_probe
+from repro.kernels import spmv as _spmv
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def resolve_use_kernel(use_kernel=None) -> bool:
+    """The one kernel-vs-reference policy: ``None`` auto-picks — Pallas
+    kernels on TPU, their jnp references elsewhere (interpret-mode Pallas
+    is emulation, not a fast path)."""
+    return _on_tpu() if use_kernel is None else bool(use_kernel)
 
 
 def sorted_probe(sorted_keys, probe_keys):
@@ -24,6 +34,21 @@ def sorted_probe(sorted_keys, probe_keys):
 def segment_counts(values, valid, num_segments: int):
     return _segment_csr.segment_counts(
         values, valid, num_segments, interpret=not _on_tpu())
+
+
+def edge_spmv(src, dst, valid, x, num_vertices: int):
+    return _spmv.edge_spmv(src, dst, valid, x, num_vertices,
+                           interpret=not _on_tpu())
+
+
+def edge_min_label(src, dst, valid, labels, num_vertices: int):
+    return _label_prop.edge_min_label(src, dst, valid, labels, num_vertices,
+                                      interpret=not _on_tpu())
+
+
+def frontier_expand(src, dst, valid, frontier, visited, num_vertices: int):
+    return _frontier.frontier_expand(src, dst, valid, frontier, visited,
+                                     num_vertices, interpret=not _on_tpu())
 
 
 def bloom_build(keys, valid, num_bits: int, num_hashes: int = 2):

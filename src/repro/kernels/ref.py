@@ -26,6 +26,37 @@ def segment_counts(values: jnp.ndarray, valid: jnp.ndarray,
     )
 
 
+def edge_spmv(src: jnp.ndarray, dst: jnp.ndarray, valid: jnp.ndarray,
+              x: jnp.ndarray, num_vertices: int) -> jnp.ndarray:
+    """Push SpMV over COO edges: ``y[v] = sum_{valid (u,v)} x[u]``."""
+    contrib = jnp.where(valid, x.astype(jnp.float32)[src], 0.0)
+    return (
+        jnp.zeros((num_vertices,), jnp.float32)
+        .at[dst]
+        .add(jnp.where(valid, contrib, 0.0), mode="drop")
+    )
+
+
+def edge_min_label(src: jnp.ndarray, dst: jnp.ndarray, valid: jnp.ndarray,
+                   labels: jnp.ndarray, num_vertices: int) -> jnp.ndarray:
+    """One min-label propagation step (identity included)."""
+    int_max = jnp.int32(2**31 - 1)
+    lab = labels.astype(jnp.int32)
+    incoming = jnp.where(valid, lab[src], int_max)
+    return lab[:num_vertices].at[dst].min(incoming, mode="drop")
+
+
+def frontier_expand(src: jnp.ndarray, dst: jnp.ndarray, valid: jnp.ndarray,
+                    frontier: jnp.ndarray, visited: jnp.ndarray,
+                    num_vertices: int) -> jnp.ndarray:
+    """One BFS level: newly reached = touched-by-frontier and not visited."""
+    hit = (valid & frontier.astype(bool)[src]).astype(jnp.int32)
+    reached = (
+        jnp.zeros((num_vertices,), jnp.int32).at[dst].max(hit, mode="drop")
+    ) > 0
+    return reached & ~visited.astype(bool)
+
+
 def _bloom_hashes(keys: jnp.ndarray, num_bits: int, num_hashes: int):
     """Cheap multiplicative hashes -> (num_hashes, N) bit positions."""
     ks = keys.astype(jnp.uint32)

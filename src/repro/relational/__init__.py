@@ -13,6 +13,7 @@ from repro.relational.ops import (
     dedup,
     concat,
     count_distinct,
+    table_digest,
 )
 
 __all__ = [
@@ -29,4 +30,5 @@ __all__ = [
     "dedup",
     "concat",
     "count_distinct",
+    "table_digest",
 ]

@@ -84,3 +84,28 @@ def count_distinct(table: Table, col: str) -> int:
     """Host-side distinct count of a key column (ANALYZE-style statistic)."""
     vals = np.asarray(table[col])[np.asarray(table.valid)]
     return int(np.unique(vals).size)
+
+
+def table_digest(table: Table) -> str:
+    """Content address of the *valid* rows (column names + values).
+
+    Rows are canonicalized by a lexicographic sort first, so the digest is
+    a *bag* address: padding, capacity, and row order — which vary with the
+    plan that produced the table — never change it.  Used to
+    content-address derived artifacts (e.g. the engine's CSR cache, where
+    ``extgraph`` and ``ringo`` runs of one model must collide).
+    """
+    import hashlib
+
+    h = hashlib.sha1()
+    data = table.to_numpy()
+    names = sorted(data)
+    n = len(data[names[0]]) if names else 0
+    if n:
+        order = np.lexsort(tuple(data[k] for k in reversed(names)))
+    else:
+        order = np.arange(0)
+    for name in names:
+        h.update(name.encode())
+        h.update(np.ascontiguousarray(data[name][order]).tobytes())
+    return h.hexdigest()[:16]

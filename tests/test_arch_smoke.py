@@ -16,6 +16,8 @@ from repro.models import (
     prefill,
 )
 
+pytestmark = pytest.mark.slow  # compile-heavy; CI runs -m "not slow"
+
 B, S = 2, 16
 
 

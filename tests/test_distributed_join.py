@@ -5,6 +5,10 @@ Subprocess with forced host devices (main process owns a 1-device backend).
 import subprocess
 import sys
 
+import pytest
+
+pytestmark = pytest.mark.slow  # compile-heavy; CI runs -m "not slow"
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

@@ -172,7 +172,8 @@ def test_engine_caches_and_matches_wrapper(db):
     cold = engine.extract(model)
     assert not cold.provenance.plan_cache_hit
     assert cold.provenance.views_built, "expected JS-MV view(s) at SF=1"
-    assert engine.cache_info() == {"plans": 1, "views": len(cold.provenance.views_built)}
+    assert engine.cache_info() == {
+        "plans": 1, "views": len(cold.provenance.views_built), "csrs": 0}
 
     # warm request: fresh (but signature-identical) model object
     warm = engine.extract(recommendation_model("store"))

@@ -20,6 +20,8 @@ from repro.training.trainer import (
 )
 
 
+pytestmark = pytest.mark.slow  # compile-heavy; CI runs -m "not slow"
+
 @pytest.fixture()
 def small_setup(tmp_path):
     cfg = get_smoke_config("llama3.2-3b")

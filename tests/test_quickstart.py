@@ -1,0 +1,29 @@
+"""Smoke test: the quickstart example runs end-to-end at tiny scale.
+
+It exercises the whole public surface in one go — builder, engine session,
+plan/view caching, ``graph_view``, and ``engine.analyze`` — so a passing
+run is a cheap guarantee the README story holds together.
+"""
+import importlib.util
+import pathlib
+
+import pytest
+
+_QUICKSTART = (pathlib.Path(__file__).resolve().parent.parent
+               / "examples" / "quickstart.py")
+
+
+def _load_quickstart():
+    spec = importlib.util.spec_from_file_location("quickstart", _QUICKSTART)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_quickstart_runs_end_to_end(capsys):
+    mod = _load_quickstart()
+    mod.main(sf=1)
+    out = capsys.readouterr().out
+    assert "cache_hit=True" in out
+    assert "pagerank (csr_cache_hit=True" in out
+    assert "weakly connected components:" in out
