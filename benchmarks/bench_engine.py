@@ -16,6 +16,7 @@ from typing import List
 
 from benchmarks.common import REPEATS, SFS, Row
 from repro.api import ExtractionEngine
+from repro.core.pipeline import drain_reoptimizations
 from repro.data import make_tpcds, recommendation_model
 
 JSON_PATH = os.environ.get("REPRO_BENCH_ENGINE_JSON", "BENCH_engine.json")
@@ -30,6 +31,7 @@ def run() -> List[Row]:
         model = recommendation_model("store")
 
         cold = engine.extract(model)
+        drain_reoptimizations()   # steady state: background rebuilds landed
         warm = engine.extract(model)
         for _ in range(max(0, REPEATS - 1)):  # steady state, best-of-N
             again = engine.extract(model)

@@ -1,0 +1,129 @@
+"""Cold-path extraction: eager two-phase vs compiled pipelines.
+
+For every SF and planned method this measures, in one process:
+
+* ``eager_*`` — the pre-PR baseline: an ``ExtractionEngine(compiled=False)``
+  running the two-phase count→sync→expand path, with the per-join host
+  round-trips attributed via ``relational.join.two_phase_stats()``.
+* ``cold_*`` — a fresh :class:`PipelineCompiler`: capacity planning, one
+  fused trace+compile per plan unit, single totals sync per unit.
+* ``second_cold_*`` — the same compiler against a *different* database
+  (same schema, fresh data → plan cache miss, view cache invalid): the
+  executable cache replays compiled units with zero re-tracing.
+* ``csr_cold_build_s`` — the device-resident CSR conversion of the cold
+  result (the phase that used to run per-label host ``np.sort``).
+
+Emits CSV rows plus ``BENCH_extract.json``; the headline acceptance number
+is the ``extgraph`` record at SF=1: ``speedup_cold >= 2`` and
+``speedup_second_cold`` well beyond it.
+
+    PYTHONPATH=src python -m benchmarks.bench_extract
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import List
+
+import jax
+
+from benchmarks.common import SFS, Row
+from repro.api import ExtractionEngine
+from repro.core.pipeline import (
+    PipelineCompiler,
+    clear_executable_cache,
+    drain_reoptimizations,
+)
+from repro.data import fraud_model, make_tpcds
+from repro.graph import build_csr
+from repro.graph.csr import clear_build_cache
+from repro.relational.join import reset_two_phase_stats, two_phase_stats
+
+JSON_PATH = os.environ.get("REPRO_BENCH_EXTRACT_JSON", "BENCH_extract.json")
+
+METHODS = ("extgraph", "extgraph-oj", "extgraph-mv")
+
+
+def _timed_csr(result, model) -> float:
+    t0 = time.perf_counter()
+    csr = build_csr(result.graph, model)
+    jax.block_until_ready(csr.vertex_ids)
+    return time.perf_counter() - t0
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    trajectory = []
+    model = fraud_model("store")
+    for sf in SFS:
+        db = make_tpcds(sf=sf, seed=0)
+        db2 = make_tpcds(sf=sf, seed=1)   # cold data for the warm-exe pass
+        for method in METHODS:
+            # -- pre-PR baseline: eager two-phase path --------------------
+            # drop process-wide jit caches so every method's baseline pays
+            # its own compiles, exactly like a fresh cold process
+            jax.clear_caches()
+            reset_two_phase_stats()
+            eager = ExtractionEngine(db, compiled=False).extract(
+                model, method=method)
+            counts = two_phase_stats()
+
+            # -- compiled cold: fresh executables for this method ---------
+            jax.clear_caches()
+            clear_executable_cache()
+            clear_build_cache()   # csr_cold_build_s must pay its compile
+            comp = PipelineCompiler()
+            engine = ExtractionEngine(db, compiler=comp)
+            cold = engine.extract(model, method=method)
+            cold_compile_s = comp.stats["compile_s"]
+            csr_cold_s = _timed_csr(cold, model)
+
+            # -- second cold query: warm executables, cold data -----------
+            drain_reoptimizations()   # steady state: reopt swaps landed
+            second = ExtractionEngine(db2, compiler=comp).extract(
+                model, method=method)
+
+            record = {
+                "sf": sf,
+                "method": method,
+                "model": model.name,
+                "eager_plan_s": eager.timings.plan_s,
+                "eager_extract_s": eager.timings.extract_s,
+                "eager_count_s": counts["count_s"],
+                "eager_count_calls": counts["count_calls"],
+                "cold_plan_s": cold.timings.plan_s,
+                "cold_extract_s": cold.timings.extract_s,
+                "cold_compile_s": cold_compile_s,
+                "cold_run_s": cold.timings.extract_s - cold_compile_s,
+                "second_cold_extract_s": second.timings.extract_s,
+                "csr_cold_build_s": csr_cold_s,
+                "executable_hits_second": comp.stats["hits"],
+                "pipeline_retries": comp.stats["retries"],
+                "speedup_cold":
+                    eager.timings.extract_s / cold.timings.extract_s,
+                "speedup_second_cold":
+                    eager.timings.extract_s / second.timings.extract_s,
+            }
+            trajectory.append(record)
+            rows.append((f"extract/{method}_sf{sf}_eager",
+                         eager.timings.extract_s * 1e6,
+                         f"count_calls={counts['count_calls']}"))
+            rows.append((f"extract/{method}_sf{sf}_cold",
+                         cold.timings.extract_s * 1e6,
+                         f"speedup_vs_eager={record['speedup_cold']:.2f};"
+                         f"compile_s={cold_compile_s:.3f}"))
+            rows.append((
+                f"extract/{method}_sf{sf}_second_cold",
+                second.timings.extract_s * 1e6,
+                f"speedup_vs_eager={record['speedup_second_cold']:.2f};"
+                f"exe_hits={comp.stats['hits']}"))
+
+    with open(JSON_PATH, "w") as f:
+        json.dump(trajectory, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

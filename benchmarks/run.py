@@ -3,7 +3,10 @@
 #   python -m benchmarks.run                 # every module, CSV to stdout only
 #   python -m benchmarks.run --all           # CSV + every BENCH_*.json artifact
 #   python -m benchmarks.run --only engine_warm_vs_cold,graph_analytics
+#   python -m benchmarks.run --smoke         # CI mode: tiny SF, artifact checks
 import argparse
+import json
+import math
 import os
 import sys
 import traceback
@@ -13,6 +16,7 @@ def modules():
     from benchmarks import (
         bench_breakdown,
         bench_engine,
+        bench_extract,
         bench_fraud,
         bench_graph,
         bench_jsmv_micro,
@@ -31,8 +35,39 @@ def modules():
         ("fig16_breakdown", bench_breakdown),
         ("engine_warm_vs_cold", bench_engine),
         ("graph_analytics", bench_graph),
+        ("extract_pipeline", bench_extract),
         ("kernels", bench_kernels),
     ]
+
+
+# --smoke runs only the artifact-emitting modules, then asserts each
+# artifact parses and carries its speedup fields — so benchmark scripts
+# can't silently rot (the way the `_VERTS` import break did pre-CI).
+SMOKE_MODULES = ("engine_warm_vs_cold", "graph_analytics", "extract_pipeline")
+SMOKE_FIELDS = {
+    "engine_warm_vs_cold": ("cold_s", "warm_s", "speedup"),
+    "graph_analytics": ("cold_s", "warm_s", "speedup"),
+    "extract_pipeline": ("eager_extract_s", "cold_extract_s",
+                         "second_cold_extract_s", "speedup_cold",
+                         "speedup_second_cold"),
+}
+
+
+def _check_artifact(name: str, path: str) -> None:
+    with open(path) as f:
+        data = json.load(f)
+    if not isinstance(data, list) or not data:
+        raise SystemExit(f"smoke: {path} is empty or not a record list")
+    for record in data:
+        for field in SMOKE_FIELDS[name]:
+            if field not in record:
+                raise SystemExit(
+                    f"smoke: {path} record misses field {field!r}: {record}")
+            value = record[field]
+            if not isinstance(value, (int, float)) or not math.isfinite(value):
+                raise SystemExit(
+                    f"smoke: {path} field {field!r} not finite: {value!r}")
+    print(f"# smoke: {path} OK ({len(data)} records)", file=sys.stderr)
 
 
 def main(argv=None) -> None:
@@ -46,7 +81,21 @@ def main(argv=None) -> None:
     parser.add_argument(
         "--only", default=None, metavar="NAMES",
         help="comma-separated subset of module names to run")
+    parser.add_argument(
+        "--smoke", action="store_true",
+        help="CI mode: run the artifact-emitting modules at SF=1 with one "
+             "repeat, write their BENCH_*.json artifacts, and fail unless "
+             "each parses with its expected speedup fields")
     args = parser.parse_args(argv)
+
+    if args.smoke:
+        os.environ["REPRO_BENCH_SF"] = "1"
+        os.environ["REPRO_BENCH_REPEATS"] = "1"
+        import benchmarks.common as common
+        common.SFS[:] = [1]
+        common.REPEATS = 1
+        args.all = True
+        args.only = args.only or ",".join(SMOKE_MODULES)
 
     from benchmarks.common import emit
 
@@ -70,7 +119,7 @@ def main(argv=None) -> None:
         try:
             emit(mod.run())
             if json_path and args.all:
-                artifacts.append(json_path)
+                artifacts.append((name, json_path))
         except Exception:
             failed += 1
             print(f"{name},nan,ERROR", flush=True)
@@ -79,9 +128,15 @@ def main(argv=None) -> None:
             if json_path:
                 mod.JSON_PATH = json_path
     if artifacts:
-        print("# artifacts: " + " ".join(artifacts), file=sys.stderr)
+        print("# artifacts: " + " ".join(p for _, p in artifacts),
+              file=sys.stderr)
     if failed:
         raise SystemExit(f"{failed} benchmark modules failed")
+    if args.smoke:
+        for name, path in artifacts:
+            if name in SMOKE_FIELDS:
+                _check_artifact(name, path)
+        print("# smoke: all artifacts OK", file=sys.stderr)
 
 
 if __name__ == '__main__':

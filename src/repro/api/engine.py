@@ -41,6 +41,7 @@ from repro.core.extract import (
 )
 from repro.core.jsmv import ViewDef
 from repro.core.model import GraphModel, Signature, model_signature
+from repro.core.pipeline import PipelineCompiler
 from repro.core.planner import ExtractionPlan
 from repro.core.shared import SharedPattern
 from repro.relational import Table
@@ -159,14 +160,30 @@ class ExtractionEngine:
     Both caches are LRU-bounded (``max_plans`` / ``max_views``) so a
     long-lived session serving many distinct models cannot grow without
     bound — cached views pin whole materialized join results.
+
+    Plan execution runs through a :class:`repro.core.pipeline
+    .PipelineCompiler` by default: each plan unit becomes one fused jitted
+    executable (capacities pre-sized by the cost model, overflow detected
+    on-device) that is cached keyed by (unit signature, capacity-bucket
+    vector, input-schema fingerprint), so repeated — or merely
+    shape-isomorphic — requests skip re-tracing and re-compiling.  Pass a
+    shared ``compiler`` to carry that executable cache across engines
+    (e.g. one serving process, many databases), or ``compiled=False`` for
+    the eager two-phase reference path.
     """
 
     def __init__(self, db: Database, max_plans: int = 128,
-                 max_views: int = 32, max_csrs: int = 16):
+                 max_views: int = 32, max_csrs: int = 16,
+                 compiler: Optional[PipelineCompiler] = None,
+                 compiled: bool = True):
         self.db = db
         self.max_plans = max_plans
         self.max_views = max_views
         self.max_csrs = max_csrs
+        self.compiled = bool(compiled)
+        self._owns_compiler = compiler is None
+        self.compiler = compiler if compiler is not None \
+            else PipelineCompiler()
         self._plans: "collections.OrderedDict[Tuple, ExtractionPlan]" = \
             collections.OrderedDict()
         self._views: "collections.OrderedDict[Signature, _CachedView]" = \
@@ -177,13 +194,33 @@ class ExtractionEngine:
 
     # -- cache bookkeeping ---------------------------------------------------
     def clear(self) -> None:
+        """Drop this engine's caches.
+
+        A compiler the engine created is cleared with it; an explicitly
+        shared compiler is left alone — its programs and proven capacities
+        belong to every engine holding it.
+        """
         self._plans.clear()
         self._views.clear()
         self._csrs.clear()
+        if self._owns_compiler:
+            self.compiler.clear()
 
     def cache_info(self) -> Dict[str, int]:
+        """Cache sizes plus compiled-pipeline hit/miss counters.
+
+        ``executables`` counts the process-wide executable store;
+        ``executable_hits`` / ``executable_misses`` / ``pipeline_retries``
+        are this engine's compiler's counters (hits mean a unit ran without
+        re-tracing or re-compiling).
+        """
+        cstats = self.compiler.cache_info()
         return {"plans": len(self._plans), "views": len(self._views),
-                "csrs": len(self._csrs)}
+                "csrs": len(self._csrs),
+                "executables": int(cstats["executables"]),
+                "executable_hits": int(cstats["hits"]),
+                "executable_misses": int(cstats["misses"]),
+                "pipeline_retries": int(cstats["retries"])}
 
     def _table_fingerprint(self, table: str) -> Optional[Fingerprint]:
         st = self.db.stats.get(table)
@@ -259,7 +296,8 @@ class ExtractionEngine:
             timings.plan_s = time.perf_counter() - t0
 
             t0 = time.perf_counter()
-            edges, built, reused = run_plan(rdb, plan)
+            edges, built, reused = run_plan(
+                rdb, plan, compiler=self.compiler if self.compiled else None)
             for label in edges:
                 jax.block_until_ready(edges[label].valid)
             timings.extract_s = time.perf_counter() - t0

@@ -15,6 +15,7 @@ from repro.core.model import (
 )
 from repro.core.database import Database, TableStats
 from repro.core.extract import ExtractedGraph, Timings, extract_graph
+from repro.core.pipeline import PipelineCompiler, clear_executable_cache
 from repro.core.planner import ExtractionPlan, PlanUnit, optimize, plan_cost
 
 __all__ = [
@@ -36,6 +37,8 @@ __all__ = [
     "extract_graph",
     "ExtractionPlan",
     "PlanUnit",
+    "PipelineCompiler",
+    "clear_executable_cache",
     "optimize",
     "plan_cost",
 ]

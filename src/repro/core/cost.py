@@ -22,7 +22,7 @@ import itertools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.database import Database, TableStats
-from repro.core.model import JoinCond, JoinQuery, Relation
+from repro.core.model import JoinCond, JoinQuery, Relation, join_schedule
 
 # sort-merge join constants (bytes-moved multipliers)
 C_BUILD = 1.5   # sort of the build side (multiple passes over its bytes)
@@ -120,31 +120,22 @@ def estimate_query(
     scans = {r.alias: scan_estimate(db, r) for r in query.relations}
 
     def run(seq: Sequence[str]) -> Optional[QueryEstimate]:
+        try:
+            schedule = join_schedule(query, seq)
+        except ValueError:
+            return None  # disconnected order: skip (no cartesian plans)
         cur = scans[seq[0]]
         cur = RelEstimate(cur.rows, cur.width, dict(cur.ndv))
         cost = 0.0
-        joined = {seq[0]}
-        remaining_conds = list(query.conds)
-        for a in seq[1:]:
-            conds = [c for c in remaining_conds
-                     if (c.left == a and c.right in joined)
-                     or (c.right == a and c.left in joined)]
-            if not conds:
-                return None  # disconnected order: skip (no cartesian plans)
-            for c in conds:
-                remaining_conds.remove(c)
+        for a, conds, closing in schedule:
             new = scans[a]
             rows, ndv = _join_card(cur, new, conds, a)
             cost += C_BUILD * new.bytes() + C_PROBE * cur.bytes() + C_FIXED
             width = cur.width + new.width
             cur = RelEstimate(rows, width, ndv)
             cost += C_OUT * cur.bytes()
-            joined.add(a)
             # cycle-closing conditions among already-joined aliases
-            closing = [c for c in list(remaining_conds)
-                       if c.left in joined and c.right in joined]
             for c in closing:
-                remaining_conds.remove(c)
                 lv = cur.col_ndv(c.left, c.lcol)
                 rv = cur.col_ndv(c.right, c.rcol)
                 cur.rows = max(1.0, cur.rows / max(lv, rv))
@@ -169,6 +160,37 @@ def estimate_query(
             best = est
     assert best is not None, f"no connected order for {query.name}"
     return best
+
+
+def step_expansions(
+    db: Database, query: JoinQuery, order: Sequence[str]
+) -> List[float]:
+    """Estimated *first-condition* output cardinality of each join step.
+
+    The static-capacity executor sorts/probes on the first equality
+    condition of a step and applies any further conditions as post-filters,
+    so the capacity an intermediate buffer needs is the first-condition-only
+    expansion — potentially much larger than the all-conditions estimate
+    that drives :func:`estimate_query`.  Returns one estimate per join step
+    along ``order`` (the pipeline compiler pow-2-buckets these); the running
+    estimate fed into later steps does use every condition, matching what
+    the post-filters leave behind.
+    """
+    scans = {r.alias: scan_estimate(db, r) for r in query.relations}
+    cur = scans[order[0]]
+    cur = RelEstimate(cur.rows, cur.width, dict(cur.ndv))
+    out: List[float] = []
+    for a, conds, closing in join_schedule(query, order):
+        new = scans[a]
+        cap_rows, _ = _join_card(cur, new, conds[:1], a)
+        out.append(cap_rows)
+        rows, ndv = _join_card(cur, new, conds, a)
+        cur = RelEstimate(rows, cur.width + new.width, ndv)
+        for c in closing:
+            lv = cur.col_ndv(c.left, c.lcol)
+            rv = cur.col_ndv(c.right, c.rcol)
+            cur.rows = max(1.0, cur.rows / max(lv, rv))
+    return out
 
 
 def view_stats_from_estimate(est: QueryEstimate) -> TableStats:

@@ -13,8 +13,14 @@ import jax.numpy as jnp
 
 from repro.core.cost import estimate_query, view_stats_from_estimate
 from repro.core.database import Database
-from repro.core.jsoj import MergedQuery
-from repro.core.model import ColumnRef, JoinCond, JoinQuery, Relation
+from repro.core.jsoj import MergedQuery, shared_query
+from repro.core.model import (
+    ColumnRef,
+    JoinCond,
+    JoinQuery,
+    Relation,
+    join_schedule,
+)
 from repro.relational import (
     Table,
     dedup,
@@ -24,12 +30,31 @@ from repro.relational import (
 )
 
 
-def scan_relation(db: Database, rel: Relation) -> Table:
-    """Load + filter + alias-prefix one base table (or view)."""
-    t = db.table(rel.table)
+def qualified_cond(c: JoinCond, new_alias: str):
+    """``(joined-side col, new-side col)`` qualified names for one condition.
+
+    Orients the condition so its left endpoint is on the already-joined
+    side and its right endpoint on the relation being joined in.
+    """
+    cc = c.oriented_from(c.left if c.left != new_alias else c.right)
+    return (f"{cc.left}.{cc.lcol}", f"{cc.right}.{cc.rcol}")
+
+
+def scan_table(t: Table, rel: Relation) -> Table:
+    """Filter + alias-prefix one already-loaded table.
+
+    The one definition of scan semantics — the eager executor and the
+    compiled pipeline both go through it, which is part of their
+    bag-parity contract.
+    """
     for f in rel.filters:
         t = filter_table(t, f.col, f.op, f.value)
     return t.prefix(rel.alias)
+
+
+def scan_relation(db: Database, rel: Relation) -> Table:
+    """Load + filter + alias-prefix one base table (or view)."""
+    return scan_table(db.table(rel.table), rel)
 
 
 def execute_query(
@@ -41,32 +66,14 @@ def execute_query(
     if order is None:
         order = estimate_query(db, query).order
     cur = scan_relation(db, query.relation(order[0]))
-    joined = {order[0]}
-    remaining = list(query.conds)
-    for alias in order[1:]:
-        conds = [c for c in remaining if
-                 (c.left == alias and c.right in joined)
-                 or (c.right == alias and c.left in joined)]
-        if not conds:
-            raise ValueError(f"join order {order} disconnected at {alias}")
-        for c in conds:
-            remaining.remove(c)
+    for alias, conds, closing in join_schedule(query, order):
         nxt = scan_relation(db, query.relation(alias))
-        on = []
-        for c in conds:
-            cc = c.oriented_from(c.left if c.left != alias else c.right)
-            # cc.left is on the already-joined side, cc.right on the new table
-            on.append((f"{cc.left}.{cc.lcol}", f"{cc.right}.{cc.rcol}"))
+        on = [qualified_cond(c, alias) for c in conds]
         cur = sort_merge_join(cur, nxt, on=on)
-        joined.add(alias)
         # cycle-closing conditions now fully contained in the joined set
-        closing = [c for c in list(remaining)
-                   if c.left in joined and c.right in joined]
         for c in closing:
-            remaining.remove(c)
             cur = cur.mask(cur[f"{c.left}.{c.lcol}"]
                            == cur[f"{c.right}.{c.rcol}"])
-    assert not remaining, f"unapplied conditions: {remaining}"
     return cur
 
 
@@ -91,14 +98,7 @@ def execute_merged(db: Database, merged: MergedQuery) -> Dict[str, Table]:
     bag semantics are restored by deduplicating on (S row id, this member's
     branch match row ids) — those keys identify one original join result row.
     """
-    s_query = JoinQuery(
-        name="__S__",
-        relations=merged.pattern.relations,
-        conds=merged.pattern.conds,
-        src=ColumnRef(merged.pattern.relations[0].alias, "__any__"),
-        dst=ColumnRef(merged.pattern.relations[0].alias, "__any__"),
-    )
-    cur = execute_query(db, s_query)
+    cur = execute_query(db, shared_query(merged))
     cur = cur.with_columns(
         __srow__=jnp.arange(cur.capacity, dtype=jnp.int32))
     indicators: Dict[str, str] = {}
@@ -153,15 +153,22 @@ def materialize_view(db: Database, name: str, query: JoinQuery,
     return result
 
 
-def ensure_view(db: Database, name: str, query: JoinQuery) -> bool:
+def ensure_view(db: Database, name: str, query: JoinQuery,
+                compiler=None) -> bool:
     """Materialize ``name`` (with estimated stats) unless already registered.
 
     View names are content-addressed (:func:`repro.core.jsmv.view_name`), so
     presence implies the stored table was built from the same canonical
     pattern — an engine cache hit.  Returns True iff the view was built.
+    With a :class:`repro.core.pipeline.PipelineCompiler` the view query runs
+    as one fused jitted executable instead of the eager two-phase path.
     """
     if name in db.tables:
         return False
     est = estimate_query(db, query)
-    materialize_view(db, name, query, view_stats_from_estimate(est))
+    if compiler is None:
+        result = execute_query(db, query)
+    else:
+        result = compiler.run_query(db, query)
+    db.add_view(name, result, view_stats_from_estimate(est))
     return True

@@ -93,34 +93,47 @@ def extract_vertices(db: Database, model: GraphModel) -> Dict[str, Table]:
 
 
 def run_plan(
-    db: Database, plan: ExtractionPlan
+    db: Database, plan: ExtractionPlan, compiler=None,
 ) -> Tuple[Dict[str, Table], List[str], List[str]]:
     """Execute a plan; returns (edges, views built, views reused).
 
     ``plan.reused`` views must already be registered in ``db``; ``plan.views``
     entries that happen to be registered too (a cached plan replayed against
     a warm view cache) are skipped and counted as reused.
+
+    With a :class:`repro.core.pipeline.PipelineCompiler`, every view and
+    unit runs as one fused jitted executable (static capacities from the
+    cost model, on-device overflow detection, executable caching) instead
+    of the eager two-phase count→expand path; the two paths produce
+    identical bags of valid rows.
     """
     built: List[str] = []
     reused: List[str] = [v.name for v in plan.reused]
     for v in plan.views:
-        if ensure_view(db, v.name, v.as_query()):
+        if ensure_view(db, v.name, v.as_query(), compiler=compiler):
             built.append(v.name)
         else:
             reused.append(v.name)
     edges: Dict[str, Table] = {}
     for u in plan.units:
         if u.is_single:
-            res = execute_query(db, u.single)
-            edges[u.single.name] = edge_output(res, u.single.src, u.single.dst)
-        else:
+            if compiler is None:
+                res = execute_query(db, u.single)
+                edges[u.single.name] = edge_output(res, u.single.src,
+                                                   u.single.dst)
+            else:
+                edges[u.single.name] = compiler.run_query_edges(db, u.single)
+        elif compiler is None:
             edges.update(execute_merged(db, u.group))
+        else:
+            edges.update(compiler.run_merged(db, u.group))
     return edges, built, reused
 
 
-def execute_plan(db: Database, plan: ExtractionPlan) -> Dict[str, Table]:
+def execute_plan(db: Database, plan: ExtractionPlan,
+                 compiler=None) -> Dict[str, Table]:
     """Materialize views in order, then run every unit (edges only)."""
-    return run_plan(db, plan)[0]
+    return run_plan(db, plan, compiler=compiler)[0]
 
 
 def _ablation_plan(db: Database, queries, oj_only: bool,

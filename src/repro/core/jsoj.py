@@ -76,6 +76,22 @@ class MergedQuery:
         return tuple(m.name for m in self.members)
 
 
+def shared_query(merged: MergedQuery) -> JoinQuery:
+    """The shared subgraph S as a standalone inner-join query.
+
+    Used identically by the cost model, the eager executor, and the
+    compiled pipeline — S's src/dst refs are placeholders (branch merging
+    happens before any edge projection).
+    """
+    return JoinQuery(
+        name="__S__",
+        relations=merged.pattern.relations,
+        conds=merged.pattern.conds,
+        src=ColumnRef(merged.pattern.relations[0].alias, "__any__"),
+        dst=ColumnRef(merged.pattern.relations[0].alias, "__any__"),
+    )
+
+
 def merge_queries(
     pattern: SharedPattern,
     members: Sequence[Tuple[JoinQuery, Embedding]],
@@ -167,14 +183,7 @@ def estimate_merged(db: Database, merged: MergedQuery) -> Tuple[float, float]:
     (>= 1 because outer joins keep unmatched rows) — this is what penalizes
     merging N-to-N branches, the failure mode JS-MV exists for (§4.2).
     """
-    s_query = JoinQuery(
-        name="__S__",
-        relations=merged.pattern.relations,
-        conds=merged.pattern.conds,
-        src=ColumnRef(merged.pattern.relations[0].alias, "__any__"),
-        dst=ColumnRef(merged.pattern.relations[0].alias, "__any__"),
-    )
-    s_est = estimate_query(db, s_query)
+    s_est = estimate_query(db, shared_query(merged))
     cost = s_est.cost
     rows = s_est.rows
     width = s_est.width

@@ -202,6 +202,44 @@ class GraphModel:
         return GraphModelBuilder(name)
 
 
+def join_schedule(
+    query: JoinQuery, order: Sequence[str]
+) -> List[Tuple[str, List[JoinCond], List[JoinCond]]]:
+    """The per-step schedule of a left-deep join along ``order``.
+
+    Returns one ``(alias, conds, closing)`` entry per join step: ``conds``
+    are the conditions connecting ``alias`` to the already-joined set (in
+    ``query.conds`` order — executors sort on the first and post-filter the
+    rest), ``closing`` the cycle-closing conditions whose endpoints are both
+    joined once ``alias`` is.  This is the single source of truth consumed
+    by the eager executor, the cost model, and the compiled pipeline — a
+    step's capacity estimate and its traced join must see the same
+    conditions in the same roles.  Raises ``ValueError`` if ``order`` is
+    disconnected or leaves conditions unapplied.
+    """
+    joined = {order[0]}
+    remaining = list(query.conds)
+    steps: List[Tuple[str, List[JoinCond], List[JoinCond]]] = []
+    for alias in order[1:]:
+        conds = [c for c in remaining
+                 if (c.left == alias and c.right in joined)
+                 or (c.right == alias and c.left in joined)]
+        if not conds:
+            raise ValueError(
+                f"join order {tuple(order)} disconnected at {alias}")
+        for c in conds:
+            remaining.remove(c)
+        joined.add(alias)
+        closing = [c for c in remaining
+                   if c.left in joined and c.right in joined]
+        for c in closing:
+            remaining.remove(c)
+        steps.append((alias, conds, closing))
+    if remaining:
+        raise ValueError(f"unapplied conditions: {remaining}")
+    return steps
+
+
 # ---------------------------------------------------------------------------
 # Pattern canonicalization (for shared-subgraph dedup and JS-MV view naming)
 # ---------------------------------------------------------------------------

@@ -61,6 +61,9 @@ def _probe_kernel(bits_ref, keys_ref, out_ref, *, num_bits: int,
 def bloom_build(keys: jax.Array, valid: jax.Array, num_bits: int,
                 num_hashes: int = 2, interpret: bool = True) -> jax.Array:
     n = keys.shape[0]
+    if n == 0:
+        # zero grid steps would leave the output uninitialized
+        return jnp.zeros((num_bits,), jnp.int32)
     n_pad = ((n + TILE - 1) // TILE) * TILE
     ks = jnp.pad(keys.astype(jnp.int32), (0, n_pad - n))
     vm = jnp.pad(valid, (0, n_pad - n), constant_values=False)
@@ -84,6 +87,8 @@ def bloom_probe(bits: jax.Array, keys: jax.Array, num_hashes: int = 2,
                 interpret: bool = True) -> jax.Array:
     num_bits = bits.shape[0]
     n = keys.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), jnp.bool_)
     n_pad = ((n + TILE - 1) // TILE) * TILE
     ks = jnp.pad(keys.astype(jnp.int32), (0, n_pad - n))
     kernel = functools.partial(_probe_kernel, num_bits=num_bits,

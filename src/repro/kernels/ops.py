@@ -51,6 +51,19 @@ def frontier_expand(src, dst, valid, frontier, visited, num_vertices: int):
                                      num_vertices, interpret=not _on_tpu())
 
 
+def bloom_bits_for(build_capacity: int) -> int:
+    """Pow-2 Bloom bitset size for a build side of ``build_capacity`` rows.
+
+    ~2 bits per candidate key keeps the false-positive rate useful while the
+    bitset stays VMEM-resident; clamped to [256, 16384] so tiny builds don't
+    underfill a tile and huge builds don't blow the stationary BlockSpec.
+    """
+    import math
+
+    raw = 1 << max(8, int(math.ceil(math.log2(max(2 * build_capacity, 1)))))
+    return min(raw, 16384)
+
+
 def bloom_build(keys, valid, num_bits: int, num_hashes: int = 2):
     return _bloom.bloom_build(
         keys, valid, num_bits, num_hashes, interpret=not _on_tpu())

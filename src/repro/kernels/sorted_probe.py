@@ -59,6 +59,12 @@ def sorted_probe(sorted_keys: jax.Array, probe_keys: jax.Array,
     """
     n_sorted = sorted_keys.shape[0]
     n_probe = probe_keys.shape[0]
+    if n_probe == 0:
+        empty = jnp.zeros((0,), jnp.int32)
+        return empty, empty
+    if n_sorted == 0:
+        zeros = jnp.zeros((n_probe,), jnp.int32)
+        return zeros, zeros
     padded = ((n_probe + PROBE_BLOCK - 1) // PROBE_BLOCK) * PROBE_BLOCK
     probe_padded = jnp.pad(probe_keys, (0, padded - n_probe),
                            constant_values=0)

@@ -172,14 +172,23 @@ def test_engine_caches_and_matches_wrapper(db):
     cold = engine.extract(model)
     assert not cold.provenance.plan_cache_hit
     assert cold.provenance.views_built, "expected JS-MV view(s) at SF=1"
-    assert engine.cache_info() == {
-        "plans": 1, "views": len(cold.provenance.views_built), "csrs": 0}
+    info = engine.cache_info()
+    assert info["plans"] == 1
+    assert info["views"] == len(cold.provenance.views_built)
+    assert info["csrs"] == 0
+    # cold request compiled its unit executables (no reuse yet)
+    assert info["executable_misses"] > 0
+    cold_misses = info["executable_misses"]
 
     # warm request: fresh (but signature-identical) model object
     warm = engine.extract(recommendation_model("store"))
     assert warm.provenance.plan_cache_hit
     assert warm.provenance.views_reused and not warm.provenance.views_built
     assert warm.timings.plan_s < cold.timings.plan_s
+    # warm request replayed cached executables without re-tracing
+    info = engine.cache_info()
+    assert info["executable_hits"] > 0
+    assert info["executable_misses"] == cold_misses
 
     # engine result == deprecated one-shot wrapper == ringo oracle
     with pytest.deprecated_call():
