@@ -1,0 +1,125 @@
+"""Incremental refresh vs cold extract under row churn.
+
+For each SF and churn fraction (0.1% / 1% / 10% of the fact table), in one
+process:
+
+* ``cold_s`` — what an update costs *without* incremental maintenance: a
+  fresh engine + fresh compiler (plan caches cold, views unbuilt) running
+  a full extract over the mutated database.  Process-level XLA caches are
+  cleared so this genuinely pays the cold path the subsystem exists to
+  avoid.
+* ``refresh_s`` — a long-lived ``auto_refresh`` engine absorbing the same
+  churn through ``refresh()``: change capture → delta joins (shapes
+  warmed by a couple of prior rounds, the steady-state contract of the
+  pow-2-padded delta pipeline) → bag application.  Parity with the cold
+  extract is asserted on every measured round via graph fingerprints.
+
+The headline acceptance number is ``speedup = cold_s / refresh_s >= 5`` at
+the ≤1% churn levels.  Emits CSV rows plus ``BENCH_incremental.json``.
+
+    PYTHONPATH=src python -m benchmarks.bench_incremental
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import REPEATS, SFS, Row
+from repro.api import ExtractionEngine
+from repro.core.database import Database
+from repro.core.pipeline import (
+    PipelineCompiler,
+    clear_executable_cache,
+    drain_reoptimizations,
+)
+from repro.data import fraud_model, make_tpcds
+
+JSON_PATH = os.environ.get("REPRO_BENCH_INCREMENTAL_JSON",
+                           "BENCH_incremental.json")
+
+CHURN_FRACTIONS = (0.001, 0.01, 0.1)
+FACT = "store_sales"
+
+
+def _churn(db: Database, rng, frac: float) -> int:
+    """Mixed insert/delete batch touching ``frac`` of the fact table."""
+    rows = db.stats[FACT].rows
+    k = max(1, int(rows * frac / 2))
+    base = int(np.asarray(db.tables[FACT]["rid"]).max()) + 1
+    db.insert_rows(
+        FACT,
+        rid=np.arange(base, base + k, dtype=np.int32),
+        c_sk=rng.integers(0, db.stats["customer"].rows, k).astype(np.int32),
+        i_sk=rng.integers(0, db.stats["item"].rows, k).astype(np.int32),
+        p_sk=rng.integers(0, db.stats["promotion"].rows, k).astype(np.int32),
+        o_sk=rng.integers(0, 4, k).astype(np.int32))
+    live = np.flatnonzero(np.asarray(db.tables[FACT].valid))
+    mask = np.zeros(db.tables[FACT].capacity, dtype=bool)
+    mask[rng.choice(live, k, replace=False)] = True
+    db.delete_rows(FACT, mask)
+    return 2 * k
+
+
+def _cold_extract_s(db: Database, model) -> tuple:
+    """Time a genuinely cold extract over the current table contents."""
+    clear_executable_cache()
+    drain_reoptimizations()
+    cold_db = Database(dict(db.tables))
+    engine = ExtractionEngine(cold_db, compiler=PipelineCompiler())
+    t0 = time.perf_counter()
+    result = engine.extract(model)
+    return time.perf_counter() - t0, result.graph.fingerprint()
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    trajectory = []
+    model = fraud_model("store")
+    for sf in SFS:
+        rng = np.random.default_rng(0)
+        db = make_tpcds(sf=sf, seed=0)
+        engine = ExtractionEngine(db, auto_refresh=True)
+        engine.extract(model)                       # the one cold extract
+        for frac in CHURN_FRACTIONS:
+            # warm the delta-pipeline shapes for this churn level
+            for _ in range(2):
+                _churn(db, rng, frac)
+                engine.extract(model)
+            best_refresh, refreshed = None, None
+            delta_rows = 0
+            for _ in range(max(1, REPEATS)):
+                delta_rows = _churn(db, rng, frac)
+                t0 = time.perf_counter()
+                refreshed = engine.extract(model)
+                dt = time.perf_counter() - t0
+                if best_refresh is None or dt < best_refresh:
+                    best_refresh = dt
+            cold_s, cold_fp = _cold_extract_s(db, model)
+            assert refreshed.graph.fingerprint() == cold_fp, \
+                "refresh() diverged from the cold extract"
+            speedup = cold_s / best_refresh
+            name = f"incremental_sf{sf}_churn{frac:g}"
+            rows.append((name, best_refresh * 1e6,
+                         f"{speedup:.1f}x vs cold "
+                         f"({refreshed.refresh.path})"))
+            trajectory.append({
+                "sf": sf,
+                "churn": frac,
+                "delta_rows": delta_rows,
+                "path": refreshed.refresh.path,
+                "cold_s": cold_s,
+                "refresh_s": best_refresh,
+                "speedup": speedup,
+            })
+    with open(JSON_PATH, "w") as f:
+        json.dump(trajectory, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

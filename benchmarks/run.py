@@ -19,6 +19,7 @@ def modules():
         bench_extract,
         bench_fraud,
         bench_graph,
+        bench_incremental,
         bench_jsmv_micro,
         bench_jsoj_micro,
         bench_kernels,
@@ -36,6 +37,7 @@ def modules():
         ("engine_warm_vs_cold", bench_engine),
         ("graph_analytics", bench_graph),
         ("extract_pipeline", bench_extract),
+        ("incremental_refresh", bench_incremental),
         ("kernels", bench_kernels),
     ]
 
@@ -43,13 +45,15 @@ def modules():
 # --smoke runs only the artifact-emitting modules, then asserts each
 # artifact parses and carries its speedup fields — so benchmark scripts
 # can't silently rot (the way the `_VERTS` import break did pre-CI).
-SMOKE_MODULES = ("engine_warm_vs_cold", "graph_analytics", "extract_pipeline")
+SMOKE_MODULES = ("engine_warm_vs_cold", "graph_analytics", "extract_pipeline",
+                 "incremental_refresh")
 SMOKE_FIELDS = {
     "engine_warm_vs_cold": ("cold_s", "warm_s", "speedup"),
     "graph_analytics": ("cold_s", "warm_s", "speedup"),
     "extract_pipeline": ("eager_extract_s", "cold_extract_s",
                          "second_cold_extract_s", "speedup_cold",
                          "speedup_second_cold"),
+    "incremental_refresh": ("cold_s", "refresh_s", "speedup"),
 }
 
 

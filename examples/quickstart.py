@@ -1,7 +1,9 @@
 """Quickstart: build a graph model with the fluent builder, open an
 ExtractionEngine session over TPC-DS, watch the second request hit the
-plan cache and reuse the materialized view built by the first, then run
-graph analytics on the extracted graph without leaving the session.
+plan cache and reuse the materialized view built by the first, run graph
+analytics on the extracted graph without leaving the session — then
+mutate the database and watch ``refresh()`` absorb the change through
+delta propagation instead of paying another cold extract.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -95,6 +97,38 @@ def main(sf: int = 2):
     wcc = engine.analyze(model, algorithm="wcc")
     n_comp = len(np.unique(np.asarray(wcc.values)))
     print(f"   weakly connected components: {n_comp}")
+
+    print("\n== 7. the database mutates; refresh() propagates the deltas ==")
+    rng = np.random.default_rng(42)
+    k = max(8, 4 * sf)
+    base = int(np.asarray(db.tables["store_sales"]["rid"]).max()) + 1
+    db.insert_rows(
+        "store_sales",
+        rid=np.arange(base, base + k, dtype=np.int32),
+        c_sk=rng.integers(0, db.stats["customer"].rows, k).astype(np.int32),
+        i_sk=rng.integers(0, db.stats["item"].rows, k).astype(np.int32),
+        p_sk=rng.integers(0, db.stats["promotion"].rows, k).astype(np.int32),
+        o_sk=rng.integers(0, 4, k).astype(np.int32))
+    db.delete_where("store_sales", "rid", "<", k // 2)
+    print(f"   +{k} sales inserted, rid < {k // 2} deleted "
+          f"(changelog epoch {db.epoch})")
+
+    r3 = engine.refresh(model)
+    rp = r3.refresh
+    print(f"   refresh path={rp.path}  churn={rp.churn:.4f}  "
+          f"views_maintained={list(rp.views_maintained)}  "
+          f"extract {r3.timings.extract_s:.3f}s")
+
+    # parity: a cold engine over the mutated tables answers identically
+    from repro.core.database import Database
+    cold = ExtractionEngine(Database(dict(db.tables)))
+    pr_refreshed = engine.analyze(model, algorithm="pagerank", label="Buy",
+                                  iters=15, auto_refresh=True)
+    pr_cold = cold.analyze(model, algorithm="pagerank", label="Buy",
+                           iters=15)
+    same = np.allclose(np.asarray(pr_refreshed.values),
+                       np.asarray(pr_cold.values), rtol=1e-5, atol=1e-7)
+    print(f"   refreshed analyze matches cold engine: {same}")
 
 
 if __name__ == "__main__":

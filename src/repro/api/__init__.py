@@ -16,12 +16,14 @@ from repro.api.engine import (
     ExtractionEngine,
     ExtractionResult,
     PlanProvenance,
+    RefreshProvenance,
 )
 
 __all__ = [
     "ExtractionEngine",
     "ExtractionResult",
     "PlanProvenance",
+    "RefreshProvenance",
     "AnalyticsProvenance",
     "AnalyticsResult",
     "AnalyticsTimings",

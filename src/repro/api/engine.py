@@ -15,6 +15,18 @@ queries, JS-MV materializes common sub-patterns).  A long-lived
 
 Every request runs against ``db.snapshot()``, so views and re-analyzed
 stats never leak into the caller's database.
+
+**Incremental maintenance** — when the database mutates through its
+change-capture API (``insert_rows`` / ``delete_rows`` / ``apply_delta``),
+:meth:`ExtractionEngine.refresh` brings cached state forward by
+*propagating deltas* instead of re-extracting: each edge query is
+differentiated by the IVM join rule (:mod:`repro.incremental.delta`),
+JS-MV views are patched in place, and a cached CSR is patched via
+:meth:`repro.graph.CSRGraph.apply_edge_delta`.  Above a churn threshold
+(or when the changelog no longer covers the cached epoch) it falls back to
+the full path.  ``auto_refresh=True`` routes every ``extract()`` /
+``analyze()`` through this decision, and the returned
+:class:`RefreshProvenance` reports which path ran.
 """
 from __future__ import annotations
 
@@ -24,6 +36,7 @@ import time
 from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
 
 import jax
+import numpy as np
 
 if TYPE_CHECKING:  # pragma: no cover - annotation-only
     from repro.graph import CSRGraph
@@ -40,10 +53,17 @@ from repro.core.extract import (
     run_plan,
 )
 from repro.core.jsmv import ViewDef
-from repro.core.model import GraphModel, Signature, model_signature
+from repro.core.model import (
+    GraphModel,
+    Signature,
+    model_signature,
+    model_tables,
+)
 from repro.core.pipeline import PipelineCompiler
 from repro.core.planner import ExtractionPlan
 from repro.core.shared import SharedPattern
+from repro.incremental.changelog import MergedDelta, merge_deltas
+from repro.incremental.delta import DeltaExecutor, apply_table_delta
 from repro.relational import Table
 
 
@@ -57,6 +77,28 @@ class PlanProvenance:
     views_reused: Tuple[str, ...] = ()
 
 
+@dataclasses.dataclass(frozen=True)
+class RefreshProvenance:
+    """Which maintenance path served a ``refresh()`` (or auto-refresh).
+
+    ``path`` is one of ``"cold"`` (no cached extraction — full extract),
+    ``"noop"`` (no deltas since the cached epoch — cached tables returned
+    as-is), ``"delta"`` (differential propagation), or ``"full"`` (churn
+    above threshold, or changelog history pruned/replaced — full
+    re-extract).  Bag digests are identical across all four paths.
+    """
+
+    path: str
+    epoch_from: int = 0
+    epoch_to: int = 0
+    churn: float = 0.0
+    threshold: float = 0.0
+    tables_changed: Tuple[str, ...] = ()
+    rows_changed: int = 0
+    views_maintained: Tuple[str, ...] = ()
+    csr_patched: bool = False
+
+
 @dataclasses.dataclass
 class ExtractionResult:
     """Graph + timings + plan provenance for one ``engine.extract()``."""
@@ -66,6 +108,7 @@ class ExtractionResult:
     provenance: PlanProvenance
     plan: Optional[ExtractionPlan] = None
     model: Optional[GraphModel] = None
+    refresh: Optional[RefreshProvenance] = None
     _engine: Optional["ExtractionEngine"] = dataclasses.field(
         default=None, repr=False, compare=False)
     _csr: Optional["CSRGraph"] = dataclasses.field(
@@ -140,6 +183,34 @@ class _CachedView:
     table: Table
     stats: TableStats
     base_fingerprints: Dict[str, Fingerprint]  # base table -> stats digest
+    # incremental-maintenance state: the changelog cursor this
+    # materialization is valid at, plus the base tables (immutable
+    # snapshots) and their stats as of that cursor — the "old" side of the
+    # differentiation rule.
+    epoch: int = 0
+    base_tables: Dict[str, Table] = dataclasses.field(default_factory=dict)
+    base_stats: Dict[str, TableStats] = dataclasses.field(
+        default_factory=dict)
+
+
+@dataclasses.dataclass
+class _CachedExtraction:
+    """Last materialized result of one (model, method) — refresh() state.
+
+    ``base_tables`` / ``base_stats`` pin the query-relation tables as of
+    ``epoch`` (immutable snapshots, shared arrays): they are the ``old``
+    bindings of delta terms, so refresh never has to reconstruct history
+    from the changelog.
+    """
+
+    model: GraphModel
+    method: str
+    plan: Optional[ExtractionPlan]
+    graph: ExtractedGraph
+    epoch: int
+    base_tables: Dict[str, Table]
+    base_stats: Dict[str, TableStats]
+    plan_key: Optional[Tuple] = None   # where `plan` sits in the plan LRU
 
 
 class ExtractionEngine:
@@ -175,12 +246,18 @@ class ExtractionEngine:
     def __init__(self, db: Database, max_plans: int = 128,
                  max_views: int = 32, max_csrs: int = 16,
                  compiler: Optional[PipelineCompiler] = None,
-                 compiled: bool = True):
+                 compiled: bool = True,
+                 auto_refresh: bool = False,
+                 refresh_threshold: float = 0.1,
+                 max_results: int = 16):
         self.db = db
         self.max_plans = max_plans
         self.max_views = max_views
         self.max_csrs = max_csrs
+        self.max_results = max_results
         self.compiled = bool(compiled)
+        self.auto_refresh = bool(auto_refresh)
+        self.refresh_threshold = float(refresh_threshold)
         self._owns_compiler = compiler is None
         self.compiler = compiler if compiler is not None \
             else PipelineCompiler()
@@ -191,6 +268,10 @@ class ExtractionEngine:
         # CSR conversions, content-addressed by graph fingerprint
         self._csrs: "collections.OrderedDict[str, CSRGraph]" = \
             collections.OrderedDict()
+        # last materialized result per (model signature, method) — what
+        # refresh() propagates deltas into
+        self._results: "collections.OrderedDict[Tuple, _CachedExtraction]" \
+            = collections.OrderedDict()
 
     # -- cache bookkeeping ---------------------------------------------------
     def clear(self) -> None:
@@ -203,6 +284,7 @@ class ExtractionEngine:
         self._plans.clear()
         self._views.clear()
         self._csrs.clear()
+        self._results.clear()
         if self._owns_compiler:
             self.compiler.clear()
 
@@ -216,7 +298,7 @@ class ExtractionEngine:
         """
         cstats = self.compiler.cache_info()
         return {"plans": len(self._plans), "views": len(self._views),
-                "csrs": len(self._csrs),
+                "csrs": len(self._csrs), "results": len(self._results),
                 "executables": int(cstats["executables"]),
                 "executable_hits": int(cstats["hits"]),
                 "executable_misses": int(cstats["misses"]),
@@ -226,15 +308,28 @@ class ExtractionEngine:
         st = self.db.stats.get(table)
         return None if st is None else st.fingerprint()
 
+    def _view_bases_mutated(self, cv: _CachedView) -> bool:
+        """Exact staleness signal: any base-table mutation since cv.epoch.
+
+        The stats fingerprints alone are lossy — incremental stats are
+        approximations, and an insert+delete round can net back to an
+        identical fingerprint while the content changed — so the
+        changelog epoch is consulted too.
+        """
+        return any(
+            not self.db.covers_epoch(t, cv.epoch)
+            or bool(self.db.deltas_since(t, cv.epoch))
+            for t in cv.base_fingerprints)
+
     def _evict_stale_views(self) -> List[str]:
-        """Drop cached views whose base-table stats changed (or vanished)."""
+        """Drop cached views whose base tables changed (or vanished)."""
         evicted = []
         for sig, cv in list(self._views.items()):
-            for table, fp in cv.base_fingerprints.items():
-                if self._table_fingerprint(table) != fp:
-                    del self._views[sig]
-                    evicted.append(cv.name)
-                    break
+            stale = any(self._table_fingerprint(t) != fp
+                        for t, fp in cv.base_fingerprints.items())
+            if stale or self._view_bases_mutated(cv):
+                del self._views[sig]
+                evicted.append(cv.name)
         return evicted
 
     def _request_db(self) -> Database:
@@ -254,34 +349,90 @@ class ExtractionEngine:
                 continue
             if v.name not in built_set:
                 continue
+            bases = {r.table for r in v.pattern.relations}
             self._views[v.pattern.signature] = _CachedView(
                 name=v.name,
                 pattern=v.pattern,
                 table=rdb.tables[v.name],
                 stats=rdb.stats[v.name],
                 base_fingerprints={
-                    r.table: self._table_fingerprint(r.table)
-                    for r in v.pattern.relations
+                    t: self._table_fingerprint(t) for t in bases
                 },
+                epoch=self.db.epoch,
+                base_tables={t: self.db.tables[t] for t in bases},
+                base_stats={t: self.db.stats[t] for t in bases},
             )
             self._views.move_to_end(v.pattern.signature)
         while len(self._views) > self.max_views:
             self._views.popitem(last=False)
 
     # -- extraction ----------------------------------------------------------
+    def _plan_key(self, model: GraphModel, method: str) -> Tuple:
+        """Plan-cache key: model signature + stats digest of *its* tables.
+
+        Fingerprinting only the tables the model reads (not the whole
+        catalog) means churn in unrelated tables cannot evict this model's
+        plan — the over-invalidation the incremental subsystem exists to
+        remove.
+        """
+        return (model_signature(model),
+                self.db.fingerprint(model_tables(model)), method)
+
+    def _query_base_state(self, model: GraphModel
+                          ) -> Tuple[Dict[str, Table], Dict[str, TableStats]]:
+        """Current query-relation tables + stats (the next ``old`` side)."""
+        names = {r.table for q in model.queries() for r in q.relations}
+        return ({t: self.db.tables[t] for t in names},
+                {t: self.db.stats[t] for t in names})
+
+    def _remember_result(self, model: GraphModel, method: str,
+                         plan: Optional[ExtractionPlan],
+                         graph: ExtractedGraph, epoch: int) -> None:
+        tables, stats = self._query_base_state(model)
+        key = (model_signature(model), method)
+        self._results[key] = _CachedExtraction(
+            model=model, method=method, plan=plan, graph=graph,
+            epoch=epoch, base_tables=tables, base_stats=stats,
+            plan_key=self._plan_key(model, method))
+        self._results.move_to_end(key)
+        while len(self._results) > self.max_results:
+            self._results.popitem(last=False)
+
     def extract(self, model: GraphModel, method: str = "extgraph",
-                verbose: bool = False) -> ExtractionResult:
+                verbose: bool = False,
+                auto_refresh: Optional[bool] = None) -> ExtractionResult:
+        """Extract ``model``; with auto-refresh, maintain instead of redo.
+
+        ``auto_refresh=None`` follows the engine-level setting.  When it
+        resolves true (planned methods only), the request is served by
+        :meth:`refresh`: cached results are brought forward by delta
+        propagation when churn since their epoch is below the threshold,
+        by a full re-extract otherwise — never by a cold plan+views+joins
+        pass when a maintained one will do.
+        """
+        auto = self.auto_refresh if auto_refresh is None else bool(
+            auto_refresh)
+        if auto and method in PLANNED_METHODS:
+            return self.refresh(model, method=method, verbose=verbose)
+        return self._extract_full(model, method, verbose)
+
+    def _extract_full(self, model: GraphModel, method: str,
+                      verbose: bool = False) -> ExtractionResult:
         if method not in PLANNED_METHODS + BASELINE_METHODS:
             raise ValueError(f"unknown method {method!r}")
         queries = model.queries()
         timings = Timings()
+        epoch0 = self.db.epoch
 
         if method in PLANNED_METHODS:
             t0 = time.perf_counter()
             self._evict_stale_views()
             rdb = self._request_db()
-            key = (model_signature(model), self.db.fingerprint(), method)
+            key = self._plan_key(model, method)
             plan = self._plans.get(key)
+            if plan is not None and not all(
+                    v.pattern.signature in self._views for v in plan.reused):
+                plan = None  # a reused view was LRU-evicted: replan
             hit = plan is not None
             if hit:
                 self._plans.move_to_end(key)
@@ -314,9 +465,254 @@ class ExtractionEngine:
         vertices = extract_vertices(self.db, model)
         graph = ExtractedGraph(vertices=vertices, edges=edges)
         graph.block_until_ready()
+        if method in PLANNED_METHODS:
+            self._remember_result(model, method, plan, graph, epoch0)
         return ExtractionResult(graph=graph, timings=timings,
                                 provenance=provenance, plan=plan,
                                 model=model, _engine=self)
+
+    # -- incremental maintenance ---------------------------------------------
+    def _merged_deltas(self, tables, epoch: int, memo: Optional[Dict] = None
+                       ) -> Optional[Dict[str, MergedDelta]]:
+        """Non-empty merged deltas per table since ``epoch``.
+
+        ``None`` means the changelog cannot service the cursor (history
+        pruned, or a table replaced wholesale) — the caller must take the
+        full path.  ``memo`` (keyed by ``(table, epoch)``) lets one
+        refresh share the folded deltas between the model's edge queries
+        and every maintained view instead of re-concatenating per view.
+        """
+        merged: Dict[str, MergedDelta] = {}
+        for t in tables:
+            if not self.db.covers_epoch(t, epoch):
+                return None
+            key = (t, epoch)
+            if memo is not None and key in memo:
+                d = memo[key]
+            else:
+                entries = self.db.deltas_since(t, epoch)
+                d = merge_deltas(entries) if entries else None
+                if memo is not None:
+                    memo[key] = d
+            if d is not None and not d.empty:
+                merged[t] = d
+        return merged
+
+    def _maintain_views(self, memo: Optional[Dict] = None) -> List[str]:
+        """Patch every cached view whose base tables mutated; returns names.
+
+        Staleness is decided by the exact changelog signal
+        (:meth:`_view_bases_mutated`), never by the lossy stats
+        fingerprints alone.  Views whose changelog cursor is no longer
+        serviceable are evicted (the planner will rebuild them);
+        everything else gets the view query's delta applied to the cached
+        materialization, its stats row count corrected, and its
+        fingerprints/cursor advanced — so a subsequent request treats it
+        as fresh instead of rebuilding.
+        """
+        maintained: List[str] = []
+        for sig, cv in list(self._views.items()):
+            view = ViewDef(cv.name, cv.pattern)
+            merged = self._merged_deltas(view.base_tables(), cv.epoch,
+                                         memo=memo)
+            if merged is None:
+                del self._views[sig]     # history gone: must rebuild
+                continue
+            if merged:
+                executor = DeltaExecutor(
+                    self.db, cv.base_tables, cv.base_stats, merged,
+                    compiler=self.compiler if self.compiled else None)
+                plus, minus = executor.query_delta(view.as_query(),
+                                                   edges=False)
+                cv.table = apply_table_delta(cv.table, plus, minus)
+                rows = int(np.asarray(cv.table.valid).sum())
+                cv.stats = dataclasses.replace(cv.stats, rows=rows)
+                maintained.append(cv.name)
+            bases = view.base_tables()
+            cv.base_fingerprints = {
+                t: self._table_fingerprint(t) for t in bases}
+            cv.base_tables = {t: self.db.tables[t] for t in bases}
+            cv.base_stats = {t: self.db.stats[t] for t in bases}
+            cv.epoch = self.db.epoch
+        return maintained
+
+    def _patch_csr(self, cached: _CachedExtraction, new_graph: ExtractedGraph,
+                   deltas: Dict[str, Tuple[List[Table], List[Table]]],
+                   vertex_changed: bool) -> bool:
+        """Patch the cached CSR of the old graph onto the new fingerprint.
+
+        Only possible when the vertex set is unchanged (dense numbering
+        survives) and the old CSR is still cached; edge deltas are
+        remapped to dense indices and applied as COO append + tombstones.
+        Returns True iff a patched CSR now serves the new fingerprint.
+        """
+        if vertex_changed or not self._csrs:
+            return False
+        old_fp = cached.graph.fingerprint()
+        new_fp = new_graph.fingerprint()
+        if old_fp == new_fp or new_fp in self._csrs:
+            return False
+        csr = self._csrs.get(old_fp)
+        if csr is None:
+            return False
+        ids = np.asarray(csr.vertex_ids)
+        by_label = {e.label: e for e in cached.model.edges}
+
+        def remap(values: np.ndarray, vlabel: str) -> Optional[np.ndarray]:
+            lo, hi = csr.vertex_ranges[vlabel]
+            seg = ids[lo:hi]
+            if len(seg) == 0:
+                return None if len(values) else \
+                    np.zeros((0,), dtype=np.int32)
+            pos = np.searchsorted(seg, values)
+            ok = (pos < len(seg))
+            ok &= np.where(ok, seg[np.minimum(pos, len(seg) - 1)] == values,
+                           False)
+            if not ok.all():
+                return None
+            return (lo + pos).astype(np.int32)
+
+        patches = []
+        for e in cached.model.edges:
+            name = e.query.name
+            plus_parts, minus_parts = deltas.get(name, ([], []))
+            sides = []
+            for parts in (plus_parts, minus_parts):
+                datas = [p.to_numpy() for p in parts]
+                src = np.concatenate([d["src"] for d in datas]) if datas \
+                    else np.zeros((0,), np.int32)
+                dst = np.concatenate([d["dst"] for d in datas]) if datas \
+                    else np.zeros((0,), np.int32)
+                s = remap(src, by_label[e.label].src_label)
+                d = remap(dst, by_label[e.label].dst_label)
+                if s is None or d is None:
+                    return False  # unmappable endpoint: leave CSR to rebuild
+                sides.append((s, d))
+            if len(sides[0][0]) or len(sides[1][0]):
+                patches.append((name, sides))
+        for name, ((ps, pd), (ms, md)) in patches:
+            csr = csr.apply_edge_delta(name, add_src=ps, add_dst=pd,
+                                       del_src=ms, del_dst=md)
+        self._csrs[new_fp] = csr
+        self._csrs.move_to_end(new_fp)
+        while len(self._csrs) > self.max_csrs:
+            self._csrs.popitem(last=False)
+        return True
+
+    def refresh(self, model: GraphModel, method: str = "extgraph",
+                verbose: bool = False) -> ExtractionResult:
+        """Bring ``model``'s cached extraction up to date with the database.
+
+        Consults the changelog epoch: no mutations → the cached tables are
+        returned as-is; churn at or below ``refresh_threshold`` (touched
+        rows / live rows over the model's query tables) → the delta path
+        (IVM join rule per edge query, JS-MV views maintained in place,
+        CSR cache patched); anything else → the full extract path.  The
+        result's bag digests are identical to a from-scratch ``extract()``
+        on the mutated database, whichever path ran.
+        """
+        if method not in PLANNED_METHODS:
+            raise ValueError(
+                f"refresh() supports planned methods only, not {method!r}")
+        key = (model_signature(model), method)
+        cached = self._results.get(key)
+        if cached is None:
+            res = self._extract_full(model, method, verbose)
+            res.refresh = RefreshProvenance(path="cold",
+                                            epoch_to=self.db.epoch,
+                                            threshold=self.refresh_threshold)
+            return res
+        self._results.move_to_end(key)
+        epoch_from, epoch_to = cached.epoch, self.db.epoch
+
+        delta_memo: Dict = {}
+        merged = self._merged_deltas(model_tables(model), cached.epoch,
+                                     memo=delta_memo)
+        if merged is None:
+            res = self._extract_full(model, method, verbose)
+            res.refresh = RefreshProvenance(
+                path="full", epoch_from=epoch_from, epoch_to=epoch_to,
+                churn=1.0, threshold=self.refresh_threshold)
+            return res
+        if not merged:
+            timings = Timings()
+            provenance = PlanProvenance(method=method, plan_cache_hit=True)
+            result = ExtractionResult(
+                graph=cached.graph, timings=timings, provenance=provenance,
+                plan=cached.plan, model=model, _engine=self,
+                refresh=RefreshProvenance(
+                    path="noop", epoch_from=epoch_from, epoch_to=epoch_to,
+                    threshold=self.refresh_threshold))
+            cached.epoch = epoch_to
+            return result
+
+        # churn: touched rows as a fraction of live rows, over query tables
+        query_tables = {r.table for q in model.queries()
+                        for r in q.relations}
+        rows_changed = sum(d.rows_changed for t, d in merged.items()
+                           if t in query_tables)
+        base_rows = sum(self.db.stats[t].rows for t in query_tables)
+        churn = rows_changed / max(base_rows, 1)
+        if churn > self.refresh_threshold:
+            res = self._extract_full(model, method, verbose)
+            res.refresh = RefreshProvenance(
+                path="full", epoch_from=epoch_from, epoch_to=epoch_to,
+                churn=churn, threshold=self.refresh_threshold,
+                tables_changed=tuple(sorted(merged)),
+                rows_changed=rows_changed)
+            return res
+
+        t0 = time.perf_counter()
+        executor = DeltaExecutor(
+            self.db, cached.base_tables, cached.base_stats, merged,
+            compiler=self.compiler if self.compiled else None)
+        new_edges: Dict[str, Table] = {}
+        edge_deltas: Dict[str, Tuple[List[Table], List[Table]]] = {}
+        for q in model.queries():
+            if any(r.table in merged for r in q.relations):
+                plus, minus = executor.query_delta(q, edges=True)
+                new_edges[q.name] = apply_table_delta(
+                    cached.graph.edges[q.name], plus, minus)
+                edge_deltas[q.name] = (plus, minus)
+            else:
+                new_edges[q.name] = cached.graph.edges[q.name]
+        maintained = self._maintain_views(memo=delta_memo)
+        vertices = extract_vertices(self.db, model)
+        graph = ExtractedGraph(vertices=vertices, edges=new_edges)
+        graph.block_until_ready()
+
+        vertex_changed = any(v.table in merged for v in model.vertices)
+        csr_patched = bool(self._patch_csr(cached, graph, edge_deltas,
+                                           vertex_changed))
+        timings = Timings()
+        timings.extract_s = time.perf_counter() - t0
+
+        # advance the cached state and re-key the plan under the new stats
+        cached.graph = graph
+        cached.epoch = epoch_to
+        cached.base_tables, cached.base_stats = \
+            self._query_base_state(model)
+        if cached.plan is not None:
+            new_key = self._plan_key(model, method)
+            if cached.plan_key is not None and cached.plan_key != new_key:
+                self._plans.pop(cached.plan_key, None)  # drop the stale slot
+            cached.plan_key = new_key
+            self._plans[new_key] = cached.plan
+            self._plans.move_to_end(new_key)
+            while len(self._plans) > self.max_plans:
+                self._plans.popitem(last=False)
+
+        provenance = PlanProvenance(method=method, plan_cache_hit=True)
+        return ExtractionResult(
+            graph=graph, timings=timings, provenance=provenance,
+            plan=cached.plan, model=model, _engine=self,
+            refresh=RefreshProvenance(
+                path="delta", epoch_from=epoch_from, epoch_to=epoch_to,
+                churn=churn, threshold=self.refresh_threshold,
+                tables_changed=tuple(sorted(merged)),
+                rows_changed=rows_changed,
+                views_maintained=tuple(maintained),
+                csr_patched=csr_patched))
 
     # -- analytics -----------------------------------------------------------
     def _csr_for(self, result: ExtractionResult, use_kernel: bool = False
@@ -346,7 +742,8 @@ class ExtractionEngine:
 
     def analyze(self, model: GraphModel, algorithm: str = "pagerank",
                 method: str = "extgraph", use_kernel: Optional[bool] = None,
-                verbose: bool = False, **params) -> AnalyticsResult:
+                verbose: bool = False, auto_refresh: Optional[bool] = None,
+                **params) -> AnalyticsResult:
         """Extract (cache-warm) and run a graph algorithm in one call.
 
         ``algorithm`` is a key of :data:`repro.graph.ALGORITHMS`
@@ -369,7 +766,8 @@ class ExtractionEngine:
         use_kernel = resolve_use_kernel(use_kernel)
 
         t0 = time.perf_counter()
-        result = self.extract(model, method=method, verbose=verbose)
+        result = self.extract(model, method=method, verbose=verbose,
+                              auto_refresh=auto_refresh)
         extract_s = time.perf_counter() - t0
 
         t0 = time.perf_counter()

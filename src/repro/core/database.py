@@ -1,23 +1,42 @@
-"""Database instance D = {R_i}: named columnar tables + ANALYZE statistics."""
+"""Database instance D = {R_i}: named columnar tables + ANALYZE statistics.
+
+Tables are immutable; *databases* mutate by swapping whole tables in.  The
+mutation API (:meth:`Database.insert_rows` / :meth:`Database.delete_rows` /
+:meth:`Database.apply_delta`) is the system's change-capture point: every
+call appends a signed delta to the table's
+:class:`repro.incremental.ChangeLog`, bumps the global ``epoch``, and
+updates :class:`TableStats` *incrementally* (row count, min/max,
+approximate NDV) instead of re-running a full ANALYZE — the statistics a
+continuously-mutating serving database can actually afford.  ``analyze()``
+remains the exact recomputation and resets the approximation.
+"""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Iterable, Mapping, Optional, Tuple, Union
 
 import numpy as np
 
 from repro.relational import Table, count_distinct
+from repro.relational.join import round_capacity
 
 Fingerprint = Tuple  # nested tuples, hashable
 
 
 @dataclasses.dataclass
 class TableStats:
-    """Optimizer statistics (PostgreSQL-ANALYZE analogue)."""
+    """Optimizer statistics (PostgreSQL-ANALYZE analogue).
+
+    ``distinct`` and ``minmax`` cover int key columns only.  After a
+    mutation both are *approximations* (see the ``_stats_after_*``
+    helpers); ``analyze()`` restores exact values.
+    """
 
     rows: int
     distinct: Dict[str, int]
     width: int  # columns (4 bytes each, all int32/float32)
+    minmax: Dict[str, Tuple[int, int]] = dataclasses.field(
+        default_factory=dict)
 
     def bytes(self) -> int:
         return self.rows * self.width * 4
@@ -27,20 +46,98 @@ class TableStats:
 
     def fingerprint(self) -> Fingerprint:
         """Hashable digest of these stats (cache-invalidation token)."""
-        return (self.rows, self.width, tuple(sorted(self.distinct.items())))
+        return (self.rows, self.width, tuple(sorted(self.distinct.items())),
+                tuple(sorted(self.minmax.items())))
+
+
+def compute_stats(t: Table) -> TableStats:
+    """Exact ANALYZE pass over one table (host-side)."""
+    rows = int(np.asarray(t.valid).sum())
+    distinct: Dict[str, int] = {}
+    minmax: Dict[str, Tuple[int, int]] = {}
+    valid = np.asarray(t.valid)
+    for col in t.column_names():
+        arr = np.asarray(t[col])
+        if arr.dtype.kind in "iu":
+            distinct[col] = count_distinct(t, col)
+            live = arr[valid]
+            if live.size:
+                minmax[col] = (int(live.min()), int(live.max()))
+    return TableStats(rows=rows, distinct=distinct,
+                      width=len(t.column_names()), minmax=minmax)
+
+
+def _stats_after_insert(st: TableStats, plus: TableStats) -> TableStats:
+    """Fold inserted-row stats in: exact rows, merged min/max, NDV bound.
+
+    NDV is capped at ``old + inserted_distinct`` (exact if the inserted
+    values are all new, an over-estimate otherwise) and at the row count.
+    """
+    rows = st.rows + plus.rows
+    distinct = {
+        c: min(rows, n + plus.distinct.get(c, 0))
+        for c, n in st.distinct.items()
+    }
+    minmax = dict(st.minmax)
+    for c, (lo, hi) in plus.minmax.items():
+        if c in minmax:
+            minmax[c] = (min(minmax[c][0], lo), max(minmax[c][1], hi))
+        else:
+            minmax[c] = (lo, hi)
+    return TableStats(rows=rows, distinct=distinct, width=st.width,
+                      minmax=minmax)
+
+
+def _stats_after_delete(st: TableStats, minus_rows: int) -> TableStats:
+    """Scale NDV with the surviving fraction (uniform-deletion model).
+
+    Min/max stay put — deletion can only shrink the true range, so the
+    stored range remains a valid (conservative) bound.
+    """
+    rows = max(0, st.rows - minus_rows)
+    if st.rows > 0:
+        frac = rows / st.rows
+        distinct = {c: max(1, min(rows, int(round(n * frac))))
+                    for c, n in st.distinct.items()}
+    else:
+        distinct = dict(st.distinct)
+    return TableStats(rows=rows, distinct=distinct, width=st.width,
+                      minmax=dict(st.minmax))
+
+
+RowsLike = Union[Table, Mapping[str, np.ndarray]]
 
 
 class Database:
-    """Named tables + stats; views are added at plan-execution time."""
+    """Named tables + stats; views are added at plan-execution time.
+
+    ``epoch`` counts mutations (one per :meth:`apply_delta` /
+    :meth:`insert_rows` / :meth:`delete_rows` call); ``changelog`` maps
+    each mutated table to its :class:`~repro.incremental.ChangeLog`.
+    Replacing a table wholesale (:meth:`add_table`) is *not* change
+    capture: it resets that table's history, so delta consumers holding an
+    older cursor fall back to full recomputation.
+    """
 
     def __init__(self, tables: Optional[Dict[str, Table]] = None):
         self.tables: Dict[str, Table] = dict(tables or {})
         self.stats: Dict[str, TableStats] = {}
+        self.epoch: int = 0
+        self.changelog: Dict[str, "ChangeLog"] = {}
         for name in self.tables:
             self.analyze(name)
 
     def add_table(self, name: str, table: Table, analyze: bool = True):
+        replacing = name in self.tables
         self.tables[name] = table
+        if replacing:
+            # wholesale replacement is not change capture: it invalidates
+            # the delta history, so cursors from before it stop being
+            # serviceable and refresh consumers take the full path
+            from repro.incremental.changelog import ChangeLog
+
+            self.epoch += 1
+            self.changelog.setdefault(name, ChangeLog()).prune(self.epoch)
         if analyze:
             self.analyze(name)
 
@@ -53,34 +150,195 @@ class Database:
         return self.tables[name]
 
     def analyze(self, name: str) -> TableStats:
-        t = self.tables[name]
-        rows = int(t.num_rows())
-        distinct = {}
-        for col in t.column_names():
-            arr = np.asarray(t[col])
-            if arr.dtype.kind in "iu":
-                distinct[col] = count_distinct(t, col)
-        st = TableStats(rows=rows, distinct=distinct,
-                        width=len(t.column_names()))
+        st = compute_stats(self.tables[name])
         self.stats[name] = st
         return st
 
+    # -- mutation API (change capture) ---------------------------------------
+    def _as_rows_table(self, name: str, rows: RowsLike) -> Table:
+        """Normalize inserted/deleted rows to a compact, schema-checked Table."""
+        base = self.tables[name]
+        if isinstance(rows, Table):
+            data = rows.to_numpy()
+        else:
+            data = {k: np.asarray(v) for k, v in rows.items()}
+        if set(data) != set(base.column_names()):
+            raise ValueError(
+                f"delta columns {sorted(data)} != table columns "
+                f"{list(base.column_names())} for {name!r}")
+        cols = {c: data[c].astype(np.asarray(base[c]).dtype)
+                for c in base.column_names()}
+        return Table.from_arrays(**cols)
+
+    def _log(self, name: str, plus: Optional[Table], minus: Optional[Table],
+             plus_count: int, minus_count: int) -> "TableDelta":
+        from repro.incremental.changelog import ChangeLog, TableDelta
+
+        self.epoch += 1
+        entry = TableDelta(epoch=self.epoch, plus=plus, minus=minus,
+                           plus_count=plus_count, minus_count=minus_count)
+        self.changelog.setdefault(name, ChangeLog()).append(entry)
+        return entry
+
+    def apply_delta(self, name: str, plus: Optional[RowsLike] = None,
+                    minus: Optional[Union[RowsLike, np.ndarray]] = None
+                    ) -> "TableDelta":
+        """Apply one signed delta to ``name``: delete ``minus``, insert ``plus``.
+
+        ``minus`` is a boolean mask over the table's capacity, an integer
+        array of row slots, or a rows-like bag of rows to cancel (each
+        minus row invalidates one matching valid row — bag semantics).
+        ``plus`` is a rows-like with the table's exact column set.  One
+        changelog entry (one epoch) is appended; table stats update
+        incrementally.
+        """
+        base = self.tables[name]
+        st = self.stats[name]
+        minus_table: Optional[Table] = None
+        cur = base
+
+        if minus is not None:
+            if isinstance(minus, np.ndarray):
+                if minus.dtype.kind in "iu":      # row-slot indices -> mask
+                    idx = minus
+                    minus = np.zeros((base.capacity,), dtype=bool)
+                    minus[idx] = True
+                elif minus.dtype != bool:
+                    raise ValueError(
+                        f"minus array must be a bool mask or integer row "
+                        f"indices, got dtype {minus.dtype}")
+            if isinstance(minus, np.ndarray):
+                if minus.shape != (base.capacity,):
+                    raise ValueError(
+                        f"delete mask shape {minus.shape} != "
+                        f"({base.capacity},)")
+                del_mask = np.asarray(base.valid) & minus
+                data = {c: np.asarray(base[c])[del_mask]
+                        for c in base.column_names()}
+                minus_table = Table.from_arrays(**data) \
+                    if int(del_mask.sum()) else None
+                cur = base.mask(~del_mask)
+            else:
+                requested = self._as_rows_table(name, minus)
+                from repro.relational.ops import subtract_bag
+                cur = subtract_bag(base, requested)
+                # log only the rows actually cancelled — a minus row with
+                # no match deletes nothing, and recording it would feed a
+                # phantom row into the IVM minus terms and break the
+                # refresh parity guarantee
+                removed = np.asarray(base.valid) & ~np.asarray(cur.valid)
+                if removed.any():
+                    data = {c: np.asarray(base[c])[removed]
+                            for c in base.column_names()}
+                    minus_table = Table.from_arrays(**data)
+                else:
+                    minus_table = None
+            n_minus = int(np.asarray(minus_table.valid).sum()) \
+                if minus_table is not None else 0
+            if minus_table is not None:
+                st = _stats_after_delete(st, n_minus)
+        else:
+            n_minus = 0
+
+        plus_table: Optional[Table] = None
+        if plus is not None:
+            plus_table = self._as_rows_table(name, plus)
+            n_plus = int(plus_table.capacity)
+            if n_plus:
+                valid = np.asarray(cur.valid)
+                live = {c: np.asarray(cur[c])[valid]
+                        for c in cur.column_names()}
+                cols = {c: np.concatenate([live[c], np.asarray(plus_table[c])])
+                        for c in cur.column_names()}
+                n_rows = int(valid.sum()) + n_plus
+                cur = Table.from_arrays(capacity=round_capacity(n_rows),
+                                        **cols)
+                st = _stats_after_insert(st, compute_stats(plus_table))
+            else:
+                plus_table = None
+        else:
+            n_plus = 0
+
+        if plus is None and minus is None:
+            raise ValueError("apply_delta with neither rows to insert "
+                             "nor rows to delete")
+        if plus_table is None and minus_table is None:
+            return self._log(name, None, None, 0, 0)  # empty delta: epoch only
+        self.tables[name] = cur
+        self.stats[name] = st
+        return self._log(name, plus_table, minus_table, n_plus, n_minus)
+
+    def insert_rows(self, name: str, **columns) -> "TableDelta":
+        """Append rows (one array per column) to ``name``; change-captured."""
+        return self.apply_delta(name, plus=columns)
+
+    def delete_rows(self, name: str, mask: np.ndarray) -> "TableDelta":
+        """Delete valid rows by capacity-aligned bool mask or row indices."""
+        return self.apply_delta(name, minus=np.asarray(mask))
+
+    def delete_where(self, name: str, col: str, op: str,
+                     value) -> "TableDelta":
+        """Delete valid rows matching ``col op value`` (predicate CDC)."""
+        from repro.relational.ops import _OPS
+
+        arr = np.asarray(self.tables[name][col])
+        return self.delete_rows(name, np.asarray(_OPS[op](arr, value)))
+
+    def deltas_since(self, name: str, epoch: int):
+        """Changelog entries for ``name`` strictly after ``epoch``."""
+        log = self.changelog.get(name)
+        if log is None:
+            return []
+        return log.since(epoch)
+
+    def covers_epoch(self, name: str, epoch: int) -> bool:
+        """True iff delta history for ``name`` reaches back to ``epoch``."""
+        log = self.changelog.get(name)
+        return True if log is None else log.covers(epoch)
+
+    def prune_changelog(self, before_epoch: int) -> int:
+        """Discard delta history at or below ``before_epoch``; returns #dropped.
+
+        Consumers whose cursor predates the prune point detect it via
+        :meth:`covers_epoch` and fall back to full recomputation.
+        """
+        return sum(log.prune(before_epoch)
+                   for log in self.changelog.values())
+
+    # -- snapshots / digests -------------------------------------------------
     def snapshot(self) -> "Database":
         """Shallow per-request copy: shared column arrays, private catalogs.
 
         Views registered on (and stats re-analyzed in) the snapshot never
-        leak back into this database — the isolation the extraction engine
-        relies on.
+        leak back into this database, and mutations applied to either side
+        after the split never reach the other — tables, stats objects, and
+        changelog entry lists are all private (the underlying immutable
+        arrays and delta entries are shared).
         """
         clone = Database()
         clone.tables = dict(self.tables)
         clone.stats = dict(self.stats)
+        clone.epoch = self.epoch
+        clone.changelog = {n: log.copy() for n, log in self.changelog.items()}
         return clone
 
-    def fingerprint(self) -> Fingerprint:
-        """Digest of the whole catalog's stats; changes when ANALYZE does."""
-        return tuple(sorted(
-            (name, st.fingerprint()) for name, st in self.stats.items()))
+    def fingerprint(self, tables: Optional[Iterable[str]] = None
+                    ) -> Fingerprint:
+        """Digest of the catalog's stats; changes when stats do.
+
+        ``tables`` restricts the digest to a subset — the engine keys plan
+        cache entries by the fingerprint of only the tables a model reads,
+        so unrelated churn cannot invalidate them.  Names without stats
+        (never analyzed) contribute a ``None`` marker rather than raising.
+        """
+        if tables is None:
+            items = sorted(self.stats.items())
+            return tuple((name, st.fingerprint()) for name, st in items)
+        out = []
+        for name in sorted(set(tables)):
+            st = self.stats.get(name)
+            out.append((name, None if st is None else st.fingerprint()))
+        return tuple(out)
 
     def total_bytes(self) -> int:
         return sum(s.bytes() for s in self.stats.values())

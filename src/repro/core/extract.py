@@ -45,6 +45,8 @@ PLANNED_METHODS = ("extgraph", "extgraph-oj", "extgraph-mv")
 class ExtractedGraph:
     vertices: Dict[str, Table]
     edges: Dict[str, Table]
+    _fp: Optional[str] = dataclasses.field(default=None, repr=False,
+                                           compare=False)
 
     def block_until_ready(self):
         for t in list(self.vertices.values()) + list(self.edges.values()):
@@ -54,10 +56,14 @@ class ExtractedGraph:
     def fingerprint(self) -> str:
         """Content address over all vertex/edge tables (valid rows only).
 
-        Two extractions that produced the same graph — whatever model,
-        method, or plan got them there — share a fingerprint, which is
-        what lets the engine's CSR cache skip the rebuild.
+        Two extractions that produced the same graph — whatever method,
+        plan, or (cold vs incremental-refresh) path got them there — share
+        a fingerprint, which is what lets the engine's CSR cache skip the
+        rebuild.  Memoized: the tables are immutable, and the refresh path
+        digests each graph once to locate its patchable CSR.
         """
+        if self._fp is not None:
+            return self._fp
         import hashlib
 
         from repro.relational.ops import table_digest
@@ -67,7 +73,8 @@ class ExtractedGraph:
             for label in sorted(tables):
                 h.update(f"{kind}:{label}:".encode())
                 h.update(table_digest(tables[label]).encode())
-        return h.hexdigest()[:16]
+        self._fp = h.hexdigest()[:16]
+        return self._fp
 
 
 @dataclasses.dataclass

@@ -36,6 +36,15 @@ class ViewDef:
     name: str
     pattern: SharedPattern
 
+    def base_tables(self) -> Tuple[str, ...]:
+        """Base tables the pattern reads — the view's maintenance scope.
+
+        A view is affected by exactly these tables' deltas: incremental
+        maintenance differentiates :meth:`as_query` w.r.t. them, and
+        eviction checks compare only their stats fingerprints.
+        """
+        return tuple(sorted({r.table for r in self.pattern.relations}))
+
     def as_query(self) -> JoinQuery:
         return JoinQuery(
             name=self.name,

@@ -202,6 +202,20 @@ class GraphModel:
         return GraphModelBuilder(name)
 
 
+def model_tables(model: GraphModel) -> Tuple[str, ...]:
+    """Every base table a model reads: vertex tables + edge-query relations.
+
+    The engine keys its plan cache by the stats fingerprint of *these*
+    tables only, so churn in unrelated tables cannot invalidate a model's
+    cached plan; the refresh path uses the same set to scope changelog
+    scans and churn accounting.
+    """
+    names = {v.table for v in model.vertices}
+    for q in model.queries():
+        names |= {r.table for r in q.relations}
+    return tuple(sorted(names))
+
+
 def join_schedule(
     query: JoinQuery, order: Sequence[str]
 ) -> List[Tuple[str, List[JoinCond], List[JoinCond]]]:

@@ -523,6 +523,16 @@ class PipelineCompiler:
         # bumps counters, and a shared compiler may serve several engines
         self._lock = threading.Lock()
         self._programs: "collections.OrderedDict" = collections.OrderedDict()
+        # stats-independent program memo keyed by (kind, unit): when a
+        # unit's stats fingerprint changes (incremental refresh mutates
+        # tables every round, so _programs misses every round), the unit
+        # keeps its previously learned join orders and capacities instead
+        # of re-estimating — jittering estimates would flip orders and
+        # capacity buckets, recompiling a fresh executable per refresh.
+        # Overflow-retry still grows capacities when the data truly
+        # outgrows them, and updates this memo too.
+        self._unit_memo: "collections.OrderedDict" = collections.OrderedDict()
+        self.max_unit_memo = 512
         self.stats = {"hits": 0, "misses": 0, "retries": 0,
                       "compiled": 0, "compile_s": 0.0,
                       "tiered": 0, "reoptimized": 0}
@@ -537,6 +547,14 @@ class PipelineCompiler:
         executable store; see :func:`clear_executable_cache`)."""
         with self._lock:
             self._programs.clear()
+            self._unit_memo.clear()
+
+    def _remember_unit(self, kind: str, unit, prog: UnitProgram) -> None:
+        with self._lock:
+            self._unit_memo[(kind, unit)] = prog
+            self._unit_memo.move_to_end((kind, unit))
+            while len(self._unit_memo) > self.max_unit_memo:
+                self._unit_memo.popitem(last=False)
 
     def cache_info(self) -> Dict[str, float]:
         with self._lock:
@@ -570,13 +588,17 @@ class PipelineCompiler:
             if prog is not None:
                 self._programs.move_to_end(pkey)
                 return pkey, prog
-        if kind == "merged":
-            prog = build_merged_program(db, unit, self.margin,
-                                        self.initial_capacity_clamp)
-        else:
-            prog = build_query_program(db, unit, edges=(kind == "edges"),
-                                       margin=self.margin,
-                                       clamp=self.initial_capacity_clamp)
+        with self._lock:
+            prog = self._unit_memo.get((kind, unit))
+        if prog is None:
+            if kind == "merged":
+                prog = build_merged_program(db, unit, self.margin,
+                                            self.initial_capacity_clamp)
+            else:
+                prog = build_query_program(db, unit, edges=(kind == "edges"),
+                                           margin=self.margin,
+                                           clamp=self.initial_capacity_clamp)
+            self._remember_unit(kind, unit, prog)
         with self._lock:
             self._programs[pkey] = prog
             while len(self._programs) > self.max_programs:
@@ -634,6 +656,10 @@ class PipelineCompiler:
                 if caps != prog.capacities:
                     with self._lock:                  # skip retries next time
                         self._programs[pkey] = cur
+                    # stats-independent memo too: future rebuilds of this
+                    # unit (new stats fingerprints) start at the proven
+                    # capacities instead of re-learning them via retries
+                    self._remember_unit(prog.kind, prog.unit, cur)
                 return out
             self._bump("retries")
             caps = tuple(

@@ -75,6 +75,24 @@ class ExtractionPlan:
     units: Tuple[PlanUnit, ...]
     reused: Tuple[ViewDef, ...] = ()
 
+    def reads(self) -> Tuple[str, ...]:
+        """Base tables and views the plan's views and units read.
+
+        Used by the engine to decide which cached state one table's churn
+        can actually affect (eviction and refresh both scope through it).
+        """
+        names = set()
+        for v in tuple(self.reused) + tuple(self.views):
+            names |= {r.table for r in v.pattern.relations}
+        for u in self.units:
+            if u.is_single:
+                names |= {r.table for r in u.single.relations}
+            else:
+                names |= {r.table for r in u.group.pattern.relations}
+                for b in u.group.branches:
+                    names |= {r.table for r in b.relations}
+        return tuple(sorted(names))
+
     def describe(self) -> str:
         lines = []
         for v in self.reused:

@@ -23,7 +23,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import threading
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, FrozenSet, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,8 +41,16 @@ class CSRGraph:
     Per edge label, ``offsets[label]`` is the (V+1,) row-pointer array and
     ``targets[label]`` the column index sorted by source; ``sources[label]``
     carries the source index per edge (same order), so every edge label is
-    simultaneously available as CSR and COO.  Invalid (padding) slots hold
-    ``-1`` in both ``sources`` and ``targets``.
+    simultaneously available as CSR and COO.  Invalid (padding or
+    tombstoned) slots hold ``-1`` in both ``sources`` and ``targets``.
+
+    :meth:`apply_edge_delta` patches a label in place of a full rebuild:
+    deleted edges are tombstoned (-1), inserted edges are appended as an
+    unsorted COO tail.  Labels patched this way are listed in ``dirty`` —
+    their ``offsets`` are stale (the COO view stays exact, which is all
+    the edge-kernel algorithms consume) and ``out_degree`` falls back to a
+    histogram until the garbage fraction crosses the compaction threshold
+    and the label is re-sorted into clean CSR.
     """
 
     num_vertices: int
@@ -52,8 +60,15 @@ class CSRGraph:
     targets: Dict[str, jax.Array]                  # edge label -> (E,)
     sources: Dict[str, jax.Array]                  # edge label -> (E,)
     edge_counts: Dict[str, int]
+    dirty: FrozenSet[str] = frozenset()            # labels w/ stale offsets
 
     def out_degree(self, label: str) -> jax.Array:
+        if label in self.dirty:
+            # offsets are stale on a patched label; histogram the COO view
+            from repro.kernels import ref as kref
+            return kref.segment_counts(
+                jnp.maximum(self.sources[label], 0), self.edge_valid(label),
+                self.num_vertices)
         off = self.offsets[label]
         return off[1:] - off[:-1]
 
@@ -119,6 +134,85 @@ class CSRGraph:
             targets=targets,
             sources=sources,
             edge_counts=dict(self.edge_counts),
+        )
+
+    def apply_edge_delta(
+        self,
+        label: str,
+        add_src=None,
+        add_dst=None,
+        del_src=None,
+        del_dst=None,
+        compact_threshold: float = 0.5,
+        use_kernel: bool = False,
+    ) -> "CSRGraph":
+        """Patch one edge label with a signed delta; returns a new graph.
+
+        ``add_*`` / ``del_*`` are dense vertex indices.  Deletions
+        bag-cancel matching live edges into ``-1`` tombstones; insertions
+        append an unsorted COO tail.  While the invalid fraction
+        (tombstones + padding) stays at or below ``compact_threshold`` the
+        label is only marked dirty — COO consumers (every registered
+        algorithm) see the exact edge multiset, ``offsets`` go stale;
+        above it the label is re-sorted into clean CSR on device (the same
+        ``_coo_to_csr`` pass a fresh build runs, minus the vertex remap).
+        Unpatched labels share their arrays with ``self``.
+        """
+        from repro.relational import bag_cancel_mask
+
+        src = np.asarray(self.sources[label])
+        tgt = np.asarray(self.targets[label])
+        valid = tgt >= 0
+        n_live = int(self.edge_counts[label])
+
+        if del_src is not None and len(np.asarray(del_src)):
+            del_src = np.asarray(del_src, dtype=np.int32)
+            del_dst = np.asarray(del_dst, dtype=np.int32)
+            keep = bag_cancel_mask([src, tgt], valid, [del_src, del_dst])
+            n_live -= int(valid.sum() - keep.sum())
+            src = np.where(keep, src, -1).astype(np.int32)
+            tgt = np.where(keep, tgt, -1).astype(np.int32)
+
+        if add_src is not None and len(np.asarray(add_src)):
+            add_src = np.asarray(add_src, dtype=np.int32)
+            add_dst = np.asarray(add_dst, dtype=np.int32)
+            src = np.concatenate([src, add_src])
+            tgt = np.concatenate([tgt, add_dst])
+            n_live += len(add_src)
+
+        offsets = dict(self.offsets)
+        targets = dict(self.targets)
+        sources = dict(self.sources)
+        counts = dict(self.edge_counts)
+        counts[label] = n_live
+        dirty = set(self.dirty)
+
+        slots = len(tgt)
+        garbage = 1.0 - (n_live / slots) if slots else 0.0
+        if garbage > compact_threshold:
+            off, t2, s2 = _coo_to_csr(
+                jnp.asarray(src), jnp.asarray(tgt),
+                jnp.asarray(tgt >= 0), self.num_vertices,
+                use_kernel=use_kernel)
+            cap = max(n_live, 1)
+            offsets[label] = off
+            targets[label] = t2[:cap]
+            sources[label] = s2[:cap]
+            dirty.discard(label)
+        else:
+            sources[label] = jnp.asarray(src)
+            targets[label] = jnp.asarray(tgt)
+            dirty.add(label)
+
+        return CSRGraph(
+            num_vertices=self.num_vertices,
+            vertex_ranges=self.vertex_ranges,
+            vertex_ids=self.vertex_ids,
+            offsets=offsets,
+            targets=targets,
+            sources=sources,
+            edge_counts=counts,
+            dirty=frozenset(dirty),
         )
 
 

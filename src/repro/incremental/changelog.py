@@ -1,0 +1,135 @@
+"""Change capture: per-table logs of signed delta tables (CDC analogue).
+
+Every mutation of a :class:`repro.core.database.Database` table appends one
+:class:`TableDelta` — an inserted-rows table (``plus``) and/or a
+deleted-rows table (``minus``) — to that table's :class:`ChangeLog` and
+bumps the database's global ``epoch``.  Consumers (the engine's
+``refresh()``, view maintenance) record the epoch their cached state was
+built at and later ask for :func:`merge_deltas` of everything since; the
+merged delta satisfies the bag identity
+
+    new(T)  ==  old(T)  ⊎  plus  ∖  minus
+
+which is exactly what the join-differentiation rule in
+:mod:`repro.incremental.delta` consumes.  A row inserted *and* deleted
+after the cursor appears in both sides and cancels during application
+(plus is always applied before minus), so interleaved mutation histories
+merge correctly without per-entry replay.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.relational import Table
+from repro.relational.join import round_capacity
+
+
+@dataclasses.dataclass(frozen=True)
+class TableDelta:
+    """One mutation of one table: signed row sets plus the epoch stamp.
+
+    ``plus`` / ``minus`` are ordinary :class:`Table` objects holding only
+    the affected rows (all slots valid); either may be ``None``.  Row
+    counts are recorded host-side at mutation time so churn accounting
+    never needs a device sync.
+    """
+
+    epoch: int
+    plus: Optional[Table] = None
+    minus: Optional[Table] = None
+    plus_count: int = 0
+    minus_count: int = 0
+
+    @property
+    def rows_changed(self) -> int:
+        return self.plus_count + self.minus_count
+
+
+class ChangeLog:
+    """Append-only mutation history of one table.
+
+    ``base_epoch`` is the epoch before which history has been discarded
+    (:meth:`prune`); :meth:`covers` tells a consumer whether its cursor is
+    still serviceable or it must fall back to a full recomputation.
+    """
+
+    def __init__(self, base_epoch: int = 0):
+        self.base_epoch = base_epoch
+        self.entries: List[TableDelta] = []
+
+    def append(self, entry: TableDelta) -> None:
+        self.entries.append(entry)
+
+    def since(self, epoch: int) -> List[TableDelta]:
+        """Entries strictly after ``epoch`` (the consumer's cursor)."""
+        return [e for e in self.entries if e.epoch > epoch]
+
+    def covers(self, epoch: int) -> bool:
+        return epoch >= self.base_epoch
+
+    def rows_changed_since(self, epoch: int) -> int:
+        return sum(e.rows_changed for e in self.since(epoch))
+
+    def prune(self, before_epoch: int) -> int:
+        """Drop entries at or below ``before_epoch``; returns #dropped.
+
+        Raises ``base_epoch`` so :meth:`covers` rejects cursors older than
+        the surviving history (they must take the full-recompute path).
+        """
+        kept = [e for e in self.entries if e.epoch > before_epoch]
+        dropped = len(self.entries) - len(kept)
+        self.entries = kept
+        self.base_epoch = max(self.base_epoch, before_epoch)
+        return dropped
+
+    def copy(self) -> "ChangeLog":
+        """Snapshot copy: private entry list, shared immutable deltas."""
+        clone = ChangeLog(self.base_epoch)
+        clone.entries = list(self.entries)
+        return clone
+
+
+@dataclasses.dataclass(frozen=True)
+class MergedDelta:
+    """Every entry since a cursor, folded into one signed delta.
+
+    ``plus`` / ``minus`` are compacted to valid-prefix tables padded to a
+    pow-2 capacity, so repeated refreshes at similar churn reuse the same
+    jitted join shapes (the delta-pipeline executable-cache contract).
+    """
+
+    plus: Optional[Table] = None
+    minus: Optional[Table] = None
+    plus_count: int = 0
+    minus_count: int = 0
+
+    @property
+    def empty(self) -> bool:
+        return self.plus_count == 0 and self.minus_count == 0
+
+    @property
+    def rows_changed(self) -> int:
+        return self.plus_count + self.minus_count
+
+
+def _concat_rows(tables: Sequence[Table]) -> Tuple[Optional[Table], int]:
+    """Host-side concat of the valid rows of ``tables``, pow-2 padded."""
+    datas = [t.to_numpy() for t in tables]
+    total = sum(len(next(iter(d.values()))) for d in datas) if datas else 0
+    if total == 0:
+        return None, 0
+    names = list(datas[0])
+    cols = {n: np.concatenate([d[n] for d in datas]) for n in names}
+    return Table.from_arrays(capacity=round_capacity(total), **cols), total
+
+
+def merge_deltas(entries: Sequence[TableDelta]) -> MergedDelta:
+    """Fold a list of changelog entries into one signed delta."""
+    plus, n_plus = _concat_rows([e.plus for e in entries if e.plus is not None])
+    minus, n_minus = _concat_rows(
+        [e.minus for e in entries if e.minus is not None])
+    return MergedDelta(plus=plus, minus=minus,
+                       plus_count=n_plus, minus_count=n_minus)

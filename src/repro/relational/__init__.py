@@ -7,12 +7,14 @@ from repro.relational.join import (
     composite_key,
 )
 from repro.relational.ops import (
+    bag_cancel_mask,
     filter_table,
     project,
     compact,
     dedup,
     concat,
     count_distinct,
+    subtract_bag,
     table_digest,
 )
 
@@ -30,5 +32,7 @@ __all__ = [
     "dedup",
     "concat",
     "count_distinct",
+    "subtract_bag",
+    "bag_cancel_mask",
     "table_digest",
 ]

@@ -295,8 +295,18 @@ def _join_jit(
         left, right, on, how, capacity=capacity, indicator=indicator)[0]
 
 
-def _round_capacity(n: int) -> int:
+def round_capacity(n: int) -> int:
+    """Smallest pow-2 capacity strictly above ``n`` (min 8).
+
+    The one capacity-bucketing rule shared by the eager two-phase path,
+    the compiled pipeline, and incremental delta tables — bucketing keeps
+    jitted shapes stable across requests (and across refreshes at similar
+    churn), which is what makes executable caches hit.
+    """
     return max(8, int(1 << int(np.ceil(np.log2(max(n, 1) + 1)))))
+
+
+_round_capacity = round_capacity  # historical private name, kept for callers
 
 
 def sort_merge_join(

@@ -80,6 +80,99 @@ def concat(tables: Sequence[Table]) -> Table:
     return Table(columns=cols, valid=valid)
 
 
+def bag_cancel_mask(
+    main_cols: Sequence[np.ndarray],
+    main_valid: np.ndarray,
+    minus_cols: Sequence[np.ndarray],
+    minus_valid: Optional[np.ndarray] = None,
+) -> np.ndarray:
+    """Keep-mask over main rows after bag-cancelling ``minus`` rows.
+
+    Multiset difference on the key tuple formed by the given columns: a
+    minus row with multiplicity ``m`` invalidates exactly ``m`` matching
+    valid main rows (the first ``m`` in a canonical sort — which ones is
+    immaterial under bag semantics).  Host-side numpy: one lexsort of the
+    combined rows; no compile, no device sync.  Invalid main rows stay
+    invalid; minus rows with no match cancel nothing.
+    """
+    main_cols = [np.asarray(c) for c in main_cols]
+    minus_cols = [np.asarray(c) for c in minus_cols]
+    main_valid = np.asarray(main_valid, dtype=bool)
+    n = main_valid.shape[0]
+    if minus_valid is None:
+        minus_valid = np.ones(minus_cols[0].shape, dtype=bool) \
+            if minus_cols else np.zeros((0,), dtype=bool)
+    minus_valid = np.asarray(minus_valid, dtype=bool)
+    m = minus_valid.shape[0]
+    if m == 0 or not minus_valid.any():
+        return main_valid.copy()
+
+    # Prefilter: only main rows sharing the first key value with some minus
+    # row can cancel.  Minus sides are tiny relative to maintained tables
+    # (that is the point of incremental maintenance), so this turns an
+    # O(n log n) lexsort over the whole table into one binary search plus a
+    # lexsort over the few candidate rows.
+    uniq = np.unique(minus_cols[0][minus_valid])
+    pos = np.searchsorted(uniq, main_cols[0])
+    pos_c = np.minimum(pos, len(uniq) - 1)
+    cand = main_valid & (uniq[pos_c] == main_cols[0])
+    if not cand.any():
+        return main_valid.copy()
+    if cand.sum() < n:
+        idx = np.flatnonzero(cand)
+        sub_keep = bag_cancel_mask(
+            [c[idx] for c in main_cols], np.ones(len(idx), dtype=bool),
+            minus_cols, minus_valid)
+        keep = main_valid.copy()
+        keep[idx] = sub_keep
+        return keep
+
+    cols = [np.concatenate([a, b]) for a, b in zip(main_cols, minus_cols)]
+    is_main = np.concatenate(
+        [np.ones(n, dtype=np.int8), np.zeros(m, dtype=np.int8)])
+    valid = np.concatenate([main_valid, minus_valid])
+    # priority: valid rows first, then key columns, then minus before main
+    order = np.lexsort((is_main,) + tuple(reversed(cols)) + (~valid,))
+    idx = np.arange(n + m)
+    s_main = is_main[order].astype(bool)
+    s_valid = valid[order]
+    same = np.ones(n + m, dtype=bool)
+    for c in cols:
+        sc = c[order]
+        same[1:] &= sc[1:] == sc[:-1]
+    same[0] = False
+    new_group = ~same
+    group_start = np.maximum.accumulate(np.where(new_group, idx, -1))
+    prev_main = np.concatenate([[False], s_main[:-1]])
+    first_main = s_main & (new_group | ~prev_main)
+    fm_pos = np.maximum.accumulate(np.where(first_main, idx, -1))
+    # main row at sorted pos p: its group holds (fm - start) minus rows,
+    # all sorted ahead of the mains; cancel the first that many mains
+    num_minus = fm_pos - group_start
+    cancel = s_main & s_valid & ((idx - fm_pos) < num_minus)
+    keep_sorted = ~cancel
+    keep = np.empty(n + m, dtype=bool)
+    keep[order] = keep_sorted
+    return main_valid & keep[:n]
+
+
+def subtract_bag(table: Table, minus: Table,
+                 keys: Optional[Sequence[str]] = None) -> Table:
+    """Bag difference ``table ∖ minus`` over ``keys`` (default: all of
+    ``minus``'s columns).  Each valid minus row invalidates one matching
+    valid row; shape is preserved (mask-only, like :func:`filter_table`).
+    """
+    if keys is None:
+        keys = minus.column_names()
+    keep = bag_cancel_mask(
+        [np.asarray(table[k]) for k in keys],
+        np.asarray(table.valid),
+        [np.asarray(minus[k]) for k in keys],
+        np.asarray(minus.valid),
+    )
+    return table.mask(jnp.asarray(keep))
+
+
 def count_distinct(table: Table, col: str) -> int:
     """Host-side distinct count of a key column (ANALYZE-style statistic)."""
     vals = np.asarray(table[col])[np.asarray(table.valid)]

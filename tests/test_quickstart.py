@@ -27,3 +27,6 @@ def test_quickstart_runs_end_to_end(capsys):
     assert "cache_hit=True" in out
     assert "pagerank (csr_cache_hit=True" in out
     assert "weakly connected components:" in out
+    # the mutate-then-refresh step took the delta path and stayed exact
+    assert "refresh path=delta" in out
+    assert "refreshed analyze matches cold engine: True" in out
