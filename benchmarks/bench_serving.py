@@ -1,0 +1,171 @@
+"""Serving-layer throughput: coalesced concurrent load vs one caller.
+
+A :class:`repro.serving.GraphService` over the DBLP dataset is hammered
+by ``c`` client threads (one tenant each) cycling through a small mixed
+workload of extract/analyze requests.  All clients issue the same work
+item at roughly the same time, which is exactly the high-traffic shape
+request coalescing exists for: the first submitter executes, everyone
+else joins the in-flight future.  Tenant response caches are disabled
+(``max_entries=0``) so every request actually reaches the scheduler —
+the numbers measure serving, not dict lookups.
+
+Per concurrency level the artifact records client-observed latency
+percentiles and aggregate request throughput:
+
+* ``p50_ms`` / ``p99_ms`` — per-request wall latency across all clients,
+* ``rps`` — total requests / wall time of the level,
+* ``speedup_vs_serial`` — rps over the serialized single-caller level
+  (``concurrency=1`` is the baseline, 1.0 by construction).  Warm
+  coalesced throughput at c>1 is expected to beat the serialized caller.
+
+Emits CSV rows plus ``BENCH_serving.json``.
+
+    PYTHONPATH=src python -m benchmarks.bench_serving
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import REPEATS, SFS, Row
+from repro.data import make_dblp
+from repro.data.dblp import dblp_model
+from repro.serving import GraphService, TenantQuota
+
+JSON_PATH = os.environ.get("REPRO_BENCH_SERVING_JSON", "BENCH_serving.json")
+
+CONCURRENCY = (1, 4, 8)
+MODEL = "dblp"
+
+# the request mix every client cycles through (identical across clients,
+# so concurrent rounds coalesce onto single executions)
+WORKLOAD = (
+    ("extract", {"method": "extgraph"}),
+    ("analyze", {"algorithm": "pagerank"}),
+    ("extract", {"method": "extgraph-oj"}),
+    ("analyze", {"algorithm": "degree_stats"}),
+)
+
+
+def _client(service: GraphService, tenant: str, n_requests: int,
+            latencies: List[float], errors: List[BaseException]) -> None:
+    for i in range(n_requests):
+        kind, kw = WORKLOAD[i % len(WORKLOAD)]
+        t0 = time.perf_counter()
+        try:
+            if kind == "extract":
+                service.extract(MODEL, tenant=tenant, timeout=300, **kw)
+            else:
+                service.analyze(MODEL, tenant=tenant, timeout=300, **kw)
+        except BaseException as e:      # surface, don't hang the join
+            errors.append(e)
+            return
+        latencies.append(time.perf_counter() - t0)
+
+
+def _run_level(service: GraphService, concurrency: int,
+               per_client: int) -> dict:
+    before = service.stats()["scheduler"]
+    latencies: List[float] = []
+    errors: List[BaseException] = []
+    threads = [
+        threading.Thread(target=_client,
+                         args=(service, f"client{t}", per_client,
+                               latencies, errors))
+        for t in range(concurrency)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+    after = service.stats()["scheduler"]
+    lat_ms = np.asarray(latencies) * 1e3
+    return {
+        "concurrency": concurrency,
+        "requests": len(latencies),
+        "wall_s": wall,
+        "p50_ms": float(np.percentile(lat_ms, 50)),
+        "p99_ms": float(np.percentile(lat_ms, 99)),
+        "rps": len(latencies) / wall,
+        "coalesced": after["coalesced"] - before["coalesced"],
+        "executed": after["executed"] - before["executed"],
+    }
+
+
+def _writer(service: GraphService, refresh_s: List[float]) -> None:
+    """One mutate + epoch publish in the middle of the read load."""
+    tables = service._db.tables
+    base = int(np.asarray(tables["wrote"]["rid"]).max()) + 1
+    n_auth = int(np.asarray(tables["author"]["rid"]).max()) + 1
+    n_paper = int(np.asarray(tables["paper"]["rid"]).max()) + 1
+    rng = np.random.default_rng(base)
+    k = 64
+    service.mutate("wrote", insert={
+        "rid": np.arange(base, base + k, dtype=np.int32),
+        "a_sk": rng.integers(0, n_auth, k).astype(np.int32),
+        "p_sk": rng.integers(0, n_paper, k).astype(np.int32)})
+    out = service.refresh()
+    refresh_s.append(out["build_s"])
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    trajectory = []
+    per_client = 8 * max(1, REPEATS)
+    for sf in SFS:
+        service = GraphService(
+            make_dblp(scale=sf), {MODEL: dblp_model()},
+            max_workers=max(CONCURRENCY), max_queue=256,
+            # no per-tenant response caching: measure the serving path
+            default_quota=TenantQuota(max_inflight=64, max_entries=0))
+        try:
+            for kind, kw in WORKLOAD:          # warm plans/views/executables
+                getattr(service, kind)(MODEL, tenant="warmup", **kw)
+            serial_rps = None
+            for c in CONCURRENCY:
+                level = _run_level(service, c, per_client)
+                if serial_rps is None:
+                    serial_rps = level["rps"]
+                level["sf"] = sf
+                level["speedup_vs_serial"] = level["rps"] / serial_rps
+                trajectory.append(level)
+                rows.append((
+                    f"serving_sf{sf}_c{c}",
+                    level["p50_ms"] * 1e3,
+                    f"{level['rps']:.1f} req/s "
+                    f"p99={level['p99_ms']:.1f}ms "
+                    f"{level['speedup_vs_serial']:.2f}x vs serial "
+                    f"({level['coalesced']} coalesced)"))
+            # mixed load: concurrent readers while a writer publishes the
+            # next epoch mid-stream (readers transparently follow the swap)
+            refresh_s: List[float] = []
+            writer = threading.Timer(0.05, _writer, (service, refresh_s))
+            writer.start()
+            level = _run_level(service, 4, per_client)
+            writer.join()
+            level.update(sf=sf, speedup_vs_serial=level["rps"] / serial_rps,
+                         refresh_s=refresh_s[0] if refresh_s else -1.0)
+            trajectory.append(level)
+            rows.append((
+                f"serving_sf{sf}_c4_mixed",
+                level["p50_ms"] * 1e3,
+                f"{level['rps']:.1f} req/s p99={level['p99_ms']:.1f}ms "
+                f"refresh={level['refresh_s']:.2f}s under load"))
+        finally:
+            service.close()
+    with open(JSON_PATH, "w") as f:
+        json.dump(trajectory, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

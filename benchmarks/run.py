@@ -25,6 +25,7 @@ def modules():
         bench_kernels,
         bench_real,
         bench_recommendation,
+        bench_serving,
     )
 
     return [
@@ -38,6 +39,7 @@ def modules():
         ("graph_analytics", bench_graph),
         ("extract_pipeline", bench_extract),
         ("incremental_refresh", bench_incremental),
+        ("serving", bench_serving),
         ("kernels", bench_kernels),
     ]
 
@@ -46,7 +48,7 @@ def modules():
 # artifact parses and carries its speedup fields — so benchmark scripts
 # can't silently rot (the way the `_VERTS` import break did pre-CI).
 SMOKE_MODULES = ("engine_warm_vs_cold", "graph_analytics", "extract_pipeline",
-                 "incremental_refresh")
+                 "incremental_refresh", "serving")
 SMOKE_FIELDS = {
     "engine_warm_vs_cold": ("cold_s", "warm_s", "speedup"),
     "graph_analytics": ("cold_s", "warm_s", "speedup"),
@@ -54,6 +56,8 @@ SMOKE_FIELDS = {
                          "second_cold_extract_s", "speedup_cold",
                          "speedup_second_cold"),
     "incremental_refresh": ("cold_s", "refresh_s", "speedup"),
+    "serving": ("concurrency", "p50_ms", "p99_ms", "rps",
+                "speedup_vs_serial"),
 }
 
 

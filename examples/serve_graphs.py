@@ -1,0 +1,209 @@
+"""HTTP front end for the multi-tenant graph serving layer (stdlib only).
+
+Shaped like an api-gateway routing into a graph-extraction service: a
+``ThreadingHTTPServer`` whose handlers are thin — admission, coalescing,
+MVCC, and quotas all live in :class:`repro.serving.GraphService`; this
+file only translates HTTP.
+
+Endpoints (tenant comes from the ``X-Tenant`` header, default "public"):
+
+    GET  /healthz                     liveness + served epoch
+    GET  /v1/stats                    snapshots/scheduler/tenants/engine
+    GET  /v1/models                   registered model names
+    POST /v1/extract    {"model": name, "method"?, "epoch"?}
+    POST /v1/analyze    {"model": name, "algorithm"?, "params"?, "epoch"?}
+    POST /v1/mutate     {"table": name, "insert"?: {col: [...]},
+                         "delete_where"?: [col, op, value]}
+    POST /v1/refresh    {}            build + publish the next epoch
+
+Backpressure maps to HTTP: a full queue or an over-quota tenant gets
+``429`` with a ``Retry-After`` header instead of unbounded queueing;
+requests pinned to a retired epoch get ``410 Gone``.
+
+    PYTHONPATH=src python examples/serve_graphs.py --port 8080 --dataset dblp
+    curl -s -X POST localhost:8080/v1/extract -d '{"model": "dblp"}'
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Optional
+
+import numpy as np
+
+from repro.serving import (
+    AdmissionError,
+    GraphService,
+    QuotaExceeded,
+    SnapshotNotFound,
+    UnknownModel,
+)
+
+
+def build_service(dataset: str = "dblp", scale: int = 1,
+                  **service_kwargs) -> GraphService:
+    """A service over one of the repo's synthetic datasets."""
+    if dataset == "dblp":
+        from repro.data import make_dblp
+        from repro.data.dblp import dblp_model
+        db = make_dblp(scale=scale)
+        models = {"dblp": dblp_model()}
+    elif dataset == "imdb":
+        from repro.data import make_imdb
+        from repro.data.imdb import imdb_model
+        db = make_imdb(scale=scale)
+        models = {"imdb": imdb_model()}
+    elif dataset == "tpcds":
+        from repro.data import make_tpcds
+        from repro.data.tpcds import fraud_model, recommendation_model
+        db = make_tpcds(sf=scale)
+        models = {"fraud_store": fraud_model("store"),
+                  "recommendation_store": recommendation_model("store")}
+    else:
+        raise ValueError(f"unknown dataset {dataset!r}")
+    return GraphService(db, models, **service_kwargs)
+
+
+class GraphRequestHandler(BaseHTTPRequestHandler):
+    """Thin HTTP translation over ``self.server.service``."""
+
+    protocol_version = "HTTP/1.1"
+    service: GraphService  # set via make_server()
+
+    # -- plumbing ------------------------------------------------------------
+    def _send(self, code: int, payload: dict,
+              retry_after: Optional[float] = None) -> None:
+        body = json.dumps(payload).encode()
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        if retry_after is not None:
+            self.send_header("Retry-After", f"{max(retry_after, 0.001):.3f}")
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _body(self) -> dict:
+        n = int(self.headers.get("Content-Length") or 0)
+        if not n:
+            return {}
+        return json.loads(self.rfile.read(n) or b"{}")
+
+    @property
+    def tenant(self) -> str:
+        return self.headers.get("X-Tenant") or "public"
+
+    def log_message(self, fmt, *args):  # quiet by default
+        if getattr(self.server, "verbose", False):
+            super().log_message(fmt, *args)
+
+    # -- routes --------------------------------------------------------------
+    def do_GET(self) -> None:
+        svc = self.server.service
+        if self.path == "/healthz":
+            self._send(200, {"ok": True,
+                             "served_epoch": svc.stats()["served_epoch"]})
+        elif self.path == "/v1/stats":
+            self._send(200, svc.stats())
+        elif self.path == "/v1/models":
+            self._send(200, {"models": svc.models()})
+        else:
+            self._send(404, {"error": f"no route {self.path}"})
+
+    def do_POST(self) -> None:
+        svc = self.server.service
+        try:
+            req = self._body()
+        except (ValueError, json.JSONDecodeError) as e:
+            return self._send(400, {"error": f"bad JSON: {e}"})
+        try:
+            if self.path == "/v1/extract":
+                out = svc.extract(req["model"],
+                                  method=req.get("method", "extgraph"),
+                                  tenant=self.tenant,
+                                  epoch=req.get("epoch"))
+                self._send(200, out)
+            elif self.path == "/v1/analyze":
+                out = svc.analyze(req["model"],
+                                  algorithm=req.get("algorithm", "pagerank"),
+                                  method=req.get("method", "extgraph"),
+                                  tenant=self.tenant,
+                                  epoch=req.get("epoch"),
+                                  **(req.get("params") or {}))
+                self._send(200, out)
+            elif self.path == "/v1/mutate":
+                insert = req.get("insert")
+                if insert:
+                    insert = {k: np.asarray(v) for k, v in insert.items()}
+                dw = req.get("delete_where")
+                out = svc.mutate(req["table"], insert=insert,
+                                 delete_where=tuple(dw) if dw else None)
+                self._send(200, out)
+            elif self.path == "/v1/refresh":
+                self._send(200, svc.refresh())
+            else:
+                self._send(404, {"error": f"no route {self.path}"})
+        except KeyError as e:
+            if isinstance(e, UnknownModel):
+                self._send(404, {"error": str(e)})
+            elif isinstance(e, SnapshotNotFound):
+                self._send(410, {"error": str(e),
+                                 "available": e.available})
+            else:
+                self._send(400, {"error": f"missing field {e}"})
+        except QuotaExceeded as e:
+            self._send(429, {"error": str(e), "tenant": e.tenant},
+                       retry_after=e.retry_after)
+        except AdmissionError as e:
+            self._send(429, {"error": str(e)}, retry_after=e.retry_after)
+        except ValueError as e:
+            self._send(400, {"error": str(e)})
+
+
+def make_server(service: GraphService, host: str = "127.0.0.1",
+                port: int = 0, verbose: bool = False) -> ThreadingHTTPServer:
+    """A ready-to-``serve_forever`` threading HTTP server (port 0 = any)."""
+    server = ThreadingHTTPServer((host, port), GraphRequestHandler)
+    server.service = service
+    server.verbose = verbose
+    return server
+
+
+def main(argv=None) -> None:
+    parser = argparse.ArgumentParser(
+        description="Serve extracted graphs over HTTP (multi-tenant).")
+    parser.add_argument("--port", type=int, default=8080)
+    parser.add_argument("--host", default="127.0.0.1")
+    parser.add_argument("--dataset", default="dblp",
+                        choices=("dblp", "imdb", "tpcds"))
+    parser.add_argument("--scale", type=int, default=1,
+                        help="dataset scale factor")
+    parser.add_argument("--workers", type=int, default=4,
+                        help="scheduler worker threads")
+    parser.add_argument("--warm", action="store_true",
+                        help="extract every model once before serving")
+    parser.add_argument("--verbose", action="store_true")
+    args = parser.parse_args(argv)
+
+    service = build_service(args.dataset, scale=args.scale,
+                            max_workers=args.workers)
+    if args.warm:
+        for name in service.models():
+            r = service.extract(name)
+            print(f"warmed {name}: {sum(r['edges'].values())} edges")
+    server = make_server(service, host=args.host, port=args.port,
+                         verbose=args.verbose)
+    host, port = server.server_address[:2]
+    print(f"serving {args.dataset} on http://{host}:{port} "
+          f"(models: {', '.join(service.models())})")
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.shutdown()
+        service.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 import time
 from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
 
@@ -176,7 +177,77 @@ class AnalyticsResult:
     timings: AnalyticsTimings
 
 
-@dataclasses.dataclass
+class _LRUCache:
+    """Access-ordered LRU map with hit/miss/eviction counters.
+
+    Eviction order is access time, not insertion time: :meth:`get` moves
+    the key to the MRU end, so an entry kept hot by lookups survives
+    pressure from a stream of cold inserts.  Not internally locked — the
+    owning engine serializes access under its request lock.
+    """
+
+    def __init__(self, capacity: int):
+        self.capacity = int(capacity)
+        self._data: "collections.OrderedDict" = collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def __contains__(self, key) -> bool:
+        return key in self._data
+
+    def get(self, key, default=None, count: bool = True):
+        """Counted, LRU-touching lookup (``count=False`` for bookkeeping
+        scans that should not skew the hit-rate counters)."""
+        if key in self._data:
+            self._data.move_to_end(key)
+            if count:
+                self.hits += 1
+            return self._data[key]
+        if count:
+            self.misses += 1
+        return default
+
+    def put(self, key, value) -> None:
+        self._data[key] = value
+        self._data.move_to_end(key)
+        while len(self._data) > self.capacity:
+            self._data.popitem(last=False)
+            self.evictions += 1
+
+    def pop(self, key, default=None):
+        return self._data.pop(key, default)
+
+    def items(self):
+        return self._data.items()
+
+    def values(self):
+        return self._data.values()
+
+    def keys(self):
+        return self._data.keys()
+
+    def clear(self) -> None:
+        self._data.clear()
+
+    def seed(self, other: "_LRUCache") -> None:
+        """Adopt ``other``'s entries (shared immutable values, private
+        recency book) — the engine-fork primitive MVCC snapshots use."""
+        self._data.update(other._data)
+        while len(self._data) > self.capacity:
+            self._data.popitem(last=False)
+            self.evictions += 1
+
+    def info(self) -> Dict[str, int]:
+        return {"size": len(self._data), "capacity": self.capacity,
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions}
+
+
+@dataclasses.dataclass(frozen=True)
 class _CachedView:
     name: str
     pattern: SharedPattern
@@ -193,7 +264,7 @@ class _CachedView:
         default_factory=dict)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class _CachedExtraction:
     """Last materialized result of one (model, method) — refresh() state.
 
@@ -201,6 +272,11 @@ class _CachedExtraction:
     ``epoch`` (immutable snapshots, shared arrays): they are the ``old``
     bindings of delta terms, so refresh never has to reconstruct history
     from the changelog.
+
+    Frozen (like :class:`_CachedView`): refresh *replaces* cache entries
+    instead of mutating them, so entry objects can be shared by reference
+    across forked engines — an older epoch's engine keeps serving its
+    original entry while the next epoch's fork advances its own copy.
     """
 
     model: GraphModel
@@ -249,7 +325,12 @@ class ExtractionEngine:
                  compiled: bool = True,
                  auto_refresh: bool = False,
                  refresh_threshold: float = 0.1,
-                 max_results: int = 16):
+                 max_results: int = 16,
+                 persistent_cache: Optional[str] = None):
+        # opt-in on-disk XLA cache: an explicit path, or (when None) the
+        # REPRO_COMPILATION_CACHE env var; absent both this is a no-op
+        from repro.core.pipeline import enable_persistent_compilation_cache
+        enable_persistent_compilation_cache(persistent_cache)
         self.db = db
         self.max_plans = max_plans
         self.max_views = max_views
@@ -261,17 +342,23 @@ class ExtractionEngine:
         self._owns_compiler = compiler is None
         self.compiler = compiler if compiler is not None \
             else PipelineCompiler()
-        self._plans: "collections.OrderedDict[Tuple, ExtractionPlan]" = \
-            collections.OrderedDict()
-        self._views: "collections.OrderedDict[Signature, _CachedView]" = \
-            collections.OrderedDict()
+        # one reentrant lock serializes every cache-touching request: the
+        # serving layer runs concurrent readers through a thread pool, and
+        # each epoch snapshot owns a private engine, so contention is
+        # reader-vs-reader on one epoch — never reader-vs-writer (the next
+        # epoch is built on a fork; see :meth:`fork`)
+        self._lock = threading.RLock()
+        self._plans: "_LRUCache" = _LRUCache(max_plans)
+        self._views: "_LRUCache" = _LRUCache(max_views)
         # CSR conversions, content-addressed by graph fingerprint
-        self._csrs: "collections.OrderedDict[str, CSRGraph]" = \
-            collections.OrderedDict()
+        self._csrs: "_LRUCache" = _LRUCache(max_csrs)
         # last materialized result per (model signature, method) — what
         # refresh() propagates deltas into
-        self._results: "collections.OrderedDict[Tuple, _CachedExtraction]" \
-            = collections.OrderedDict()
+        self._results: "_LRUCache" = _LRUCache(max_results)
+        # request counters (cache_info "requests"): how often each public
+        # path actually executed work, which is what serving's coalescing
+        # tests read to prove single-flight
+        self.request_stats: Dict[str, int] = collections.defaultdict(int)
 
     # -- cache bookkeeping ---------------------------------------------------
     def clear(self) -> None:
@@ -281,28 +368,66 @@ class ExtractionEngine:
         shared compiler is left alone — its programs and proven capacities
         belong to every engine holding it.
         """
-        self._plans.clear()
-        self._views.clear()
-        self._csrs.clear()
-        self._results.clear()
-        if self._owns_compiler:
-            self.compiler.clear()
+        with self._lock:
+            self._plans.clear()
+            self._views.clear()
+            self._csrs.clear()
+            self._results.clear()
+            if self._owns_compiler:
+                self.compiler.clear()
 
-    def cache_info(self) -> Dict[str, int]:
+    def cache_info(self) -> Dict[str, object]:
         """Cache sizes plus compiled-pipeline hit/miss counters.
 
         ``executables`` counts the process-wide executable store;
         ``executable_hits`` / ``executable_misses`` / ``pipeline_retries``
         are this engine's compiler's counters (hits mean a unit ran without
-        re-tracing or re-compiling).
+        re-tracing or re-compiling).  ``epoch`` is the database changelog
+        epoch this engine currently serves.  ``caches`` breaks each LRU
+        down into size/capacity/hits/misses/evictions and ``requests``
+        counts executed work per public path — the one structure the
+        serving stats endpoint and benchmarks read.
         """
-        cstats = self.compiler.cache_info()
-        return {"plans": len(self._plans), "views": len(self._views),
-                "csrs": len(self._csrs), "results": len(self._results),
-                "executables": int(cstats["executables"]),
-                "executable_hits": int(cstats["hits"]),
-                "executable_misses": int(cstats["misses"]),
-                "pipeline_retries": int(cstats["retries"])}
+        with self._lock:
+            cstats = self.compiler.cache_info()
+            return {"plans": len(self._plans), "views": len(self._views),
+                    "csrs": len(self._csrs), "results": len(self._results),
+                    "epoch": int(self.db.epoch),
+                    "executables": int(cstats["executables"]),
+                    "executable_hits": int(cstats["hits"]),
+                    "executable_misses": int(cstats["misses"]),
+                    "pipeline_retries": int(cstats["retries"]),
+                    "caches": {"plans": self._plans.info(),
+                               "views": self._views.info(),
+                               "csrs": self._csrs.info(),
+                               "results": self._results.info()},
+                    "requests": dict(self.request_stats)}
+
+    def fork(self, db: Database) -> "ExtractionEngine":
+        """A new engine over ``db`` seeded with this engine's cached state.
+
+        The MVCC primitive of the serving layer: the next epoch is built on
+        a fork over a fresh ``db.snapshot()`` while readers keep using this
+        engine.  Cache *entries* are immutable and shared by reference
+        (plans, views, CSRs, remembered results — refresh replaces entries,
+        never mutates them); the recency books and counters are private.
+        The compiler (and its executable store) is shared, so the fork
+        starts fully warm.  ``refresh()`` on the fork then advances the
+        shared entries by delta propagation — the changelog carried by the
+        snapshot still covers the seeded epochs.
+        """
+        with self._lock:
+            clone = ExtractionEngine(
+                db, max_plans=self.max_plans, max_views=self.max_views,
+                max_csrs=self.max_csrs, compiler=self.compiler,
+                compiled=self.compiled, auto_refresh=self.auto_refresh,
+                refresh_threshold=self.refresh_threshold,
+                max_results=self.max_results)
+            clone._plans.seed(self._plans)
+            clone._views.seed(self._views)
+            clone._csrs.seed(self._csrs)
+            clone._results.seed(self._results)
+            return clone
 
     def _table_fingerprint(self, table: str) -> Optional[Fingerprint]:
         st = self.db.stats.get(table)
@@ -328,7 +453,7 @@ class ExtractionEngine:
             stale = any(self._table_fingerprint(t) != fp
                         for t, fp in cv.base_fingerprints.items())
             if stale or self._view_bases_mutated(cv):
-                del self._views[sig]
+                self._views.pop(sig)
                 evicted.append(cv.name)
         return evicted
 
@@ -345,12 +470,12 @@ class ExtractionEngine:
         built_set, reused_set = set(built), set(reused)
         for v in list(plan.reused) + list(plan.views):
             if v.name in reused_set and v.pattern.signature in self._views:
-                self._views.move_to_end(v.pattern.signature)  # LRU touch
+                self._views.get(v.pattern.signature)  # LRU touch + hit
                 continue
             if v.name not in built_set:
                 continue
             bases = {r.table for r in v.pattern.relations}
-            self._views[v.pattern.signature] = _CachedView(
+            self._views.put(v.pattern.signature, _CachedView(
                 name=v.name,
                 pattern=v.pattern,
                 table=rdb.tables[v.name],
@@ -361,10 +486,7 @@ class ExtractionEngine:
                 epoch=self.db.epoch,
                 base_tables={t: self.db.tables[t] for t in bases},
                 base_stats={t: self.db.stats[t] for t in bases},
-            )
-            self._views.move_to_end(v.pattern.signature)
-        while len(self._views) > self.max_views:
-            self._views.popitem(last=False)
+            ))
 
     # -- extraction ----------------------------------------------------------
     def _plan_key(self, model: GraphModel, method: str) -> Tuple:
@@ -390,13 +512,10 @@ class ExtractionEngine:
                          graph: ExtractedGraph, epoch: int) -> None:
         tables, stats = self._query_base_state(model)
         key = (model_signature(model), method)
-        self._results[key] = _CachedExtraction(
+        self._results.put(key, _CachedExtraction(
             model=model, method=method, plan=plan, graph=graph,
             epoch=epoch, base_tables=tables, base_stats=stats,
-            plan_key=self._plan_key(model, method))
-        self._results.move_to_end(key)
-        while len(self._results) > self.max_results:
-            self._results.popitem(last=False)
+            plan_key=self._plan_key(model, method)))
 
     def extract(self, model: GraphModel, method: str = "extgraph",
                 verbose: bool = False,
@@ -412,9 +531,11 @@ class ExtractionEngine:
         """
         auto = self.auto_refresh if auto_refresh is None else bool(
             auto_refresh)
-        if auto and method in PLANNED_METHODS:
-            return self.refresh(model, method=method, verbose=verbose)
-        return self._extract_full(model, method, verbose)
+        with self._lock:
+            self.request_stats["extracts"] += 1
+            if auto and method in PLANNED_METHODS:
+                return self._refresh_locked(model, method, verbose)
+            return self._extract_full(model, method, verbose)
 
     def _extract_full(self, model: GraphModel, method: str,
                       verbose: bool = False) -> ExtractionResult:
@@ -423,27 +544,28 @@ class ExtractionEngine:
         queries = model.queries()
         timings = Timings()
         epoch0 = self.db.epoch
+        self.request_stats["full_extracts"] += 1
 
         if method in PLANNED_METHODS:
             t0 = time.perf_counter()
             self._evict_stale_views()
             rdb = self._request_db()
             key = self._plan_key(model, method)
-            plan = self._plans.get(key)
+            plan = self._plans.get(key, count=False)
             if plan is not None and not all(
                     v.pattern.signature in self._views for v in plan.reused):
+                self._plans.pop(key)
                 plan = None  # a reused view was LRU-evicted: replan
             hit = plan is not None
             if hit:
-                self._plans.move_to_end(key)
+                self._plans.hits += 1
             else:
+                self._plans.misses += 1
                 cached = [ViewDef(cv.name, cv.pattern)
                           for cv in self._views.values()]
                 plan = plan_queries(rdb, queries, method, verbose=verbose,
                                     cached_views=cached)
-                self._plans[key] = plan
-                while len(self._plans) > self.max_plans:
-                    self._plans.popitem(last=False)
+                self._plans.put(key, plan)
             timings.plan_s = time.perf_counter() - t0
 
             t0 = time.perf_counter()
@@ -516,24 +638,29 @@ class ExtractionEngine:
             merged = self._merged_deltas(view.base_tables(), cv.epoch,
                                          memo=memo)
             if merged is None:
-                del self._views[sig]     # history gone: must rebuild
+                self._views.pop(sig)     # history gone: must rebuild
                 continue
+            table, stats = cv.table, cv.stats
             if merged:
                 executor = DeltaExecutor(
                     self.db, cv.base_tables, cv.base_stats, merged,
                     compiler=self.compiler if self.compiled else None)
                 plus, minus = executor.query_delta(view.as_query(),
                                                    edges=False)
-                cv.table = apply_table_delta(cv.table, plus, minus)
-                rows = int(np.asarray(cv.table.valid).sum())
-                cv.stats = dataclasses.replace(cv.stats, rows=rows)
+                table = apply_table_delta(table, plus, minus)
+                rows = int(np.asarray(table.valid).sum())
+                stats = dataclasses.replace(stats, rows=rows)
                 maintained.append(cv.name)
             bases = view.base_tables()
-            cv.base_fingerprints = {
-                t: self._table_fingerprint(t) for t in bases}
-            cv.base_tables = {t: self.db.tables[t] for t in bases}
-            cv.base_stats = {t: self.db.stats[t] for t in bases}
-            cv.epoch = self.db.epoch
+            # replace, never mutate: the old entry object may still be
+            # serving an older epoch's forked engine
+            self._views.put(sig, dataclasses.replace(
+                cv, table=table, stats=stats,
+                base_fingerprints={
+                    t: self._table_fingerprint(t) for t in bases},
+                base_tables={t: self.db.tables[t] for t in bases},
+                base_stats={t: self.db.stats[t] for t in bases},
+                epoch=self.db.epoch))
         return maintained
 
     def _patch_csr(self, cached: _CachedExtraction, new_graph: ExtractedGraph,
@@ -546,13 +673,13 @@ class ExtractionEngine:
         remapped to dense indices and applied as COO append + tombstones.
         Returns True iff a patched CSR now serves the new fingerprint.
         """
-        if vertex_changed or not self._csrs:
+        if vertex_changed or not len(self._csrs):
             return False
         old_fp = cached.graph.fingerprint()
         new_fp = new_graph.fingerprint()
         if old_fp == new_fp or new_fp in self._csrs:
             return False
-        csr = self._csrs.get(old_fp)
+        csr = self._csrs.get(old_fp, count=False)
         if csr is None:
             return False
         ids = np.asarray(csr.vertex_ids)
@@ -593,10 +720,7 @@ class ExtractionEngine:
         for name, ((ps, pd), (ms, md)) in patches:
             csr = csr.apply_edge_delta(name, add_src=ps, add_dst=pd,
                                        del_src=ms, del_dst=md)
-        self._csrs[new_fp] = csr
-        self._csrs.move_to_end(new_fp)
-        while len(self._csrs) > self.max_csrs:
-            self._csrs.popitem(last=False)
+        self._csrs.put(new_fp, csr)
         return True
 
     def refresh(self, model: GraphModel, method: str = "extgraph",
@@ -614,6 +738,12 @@ class ExtractionEngine:
         if method not in PLANNED_METHODS:
             raise ValueError(
                 f"refresh() supports planned methods only, not {method!r}")
+        with self._lock:
+            return self._refresh_locked(model, method, verbose)
+
+    def _refresh_locked(self, model: GraphModel, method: str,
+                        verbose: bool) -> ExtractionResult:
+        self.request_stats["refreshes"] += 1
         key = (model_signature(model), method)
         cached = self._results.get(key)
         if cached is None:
@@ -622,7 +752,6 @@ class ExtractionEngine:
                                             epoch_to=self.db.epoch,
                                             threshold=self.refresh_threshold)
             return res
-        self._results.move_to_end(key)
         epoch_from, epoch_to = cached.epoch, self.db.epoch
 
         delta_memo: Dict = {}
@@ -643,7 +772,9 @@ class ExtractionEngine:
                 refresh=RefreshProvenance(
                     path="noop", epoch_from=epoch_from, epoch_to=epoch_to,
                     threshold=self.refresh_threshold))
-            cached.epoch = epoch_to
+            if epoch_to != epoch_from:
+                self._results.put(key, dataclasses.replace(
+                    cached, epoch=epoch_to))
             return result
 
         # churn: touched rows as a fraction of live rows, over query tables
@@ -687,20 +818,21 @@ class ExtractionEngine:
         timings = Timings()
         timings.extract_s = time.perf_counter() - t0
 
-        # advance the cached state and re-key the plan under the new stats
-        cached.graph = graph
-        cached.epoch = epoch_to
-        cached.base_tables, cached.base_stats = \
-            self._query_base_state(model)
+        # advance the cached state (a *replacement* entry — the old one may
+        # still serve an older epoch's fork) and re-key the plan under the
+        # new stats
+        plan_key = cached.plan_key
         if cached.plan is not None:
             new_key = self._plan_key(model, method)
-            if cached.plan_key is not None and cached.plan_key != new_key:
-                self._plans.pop(cached.plan_key, None)  # drop the stale slot
-            cached.plan_key = new_key
-            self._plans[new_key] = cached.plan
-            self._plans.move_to_end(new_key)
-            while len(self._plans) > self.max_plans:
-                self._plans.popitem(last=False)
+            if plan_key is not None and plan_key != new_key:
+                self._plans.pop(plan_key, None)  # drop the stale slot
+            plan_key = new_key
+            self._plans.put(new_key, cached.plan)
+        base_tables, base_stats = self._query_base_state(model)
+        cached = dataclasses.replace(
+            cached, graph=graph, epoch=epoch_to, base_tables=base_tables,
+            base_stats=base_stats, plan_key=plan_key)
+        self._results.put(key, cached)
 
         provenance = PlanProvenance(method=method, plan_cache_hit=True)
         return ExtractionResult(
@@ -728,17 +860,14 @@ class ExtractionEngine:
         from repro.graph import build_csr
 
         fp = result.graph.fingerprint()
-        csr = self._csrs.get(fp)
-        hit = csr is not None
-        if hit:
-            self._csrs.move_to_end(fp)
-        else:
-            csr = build_csr(result.graph, result.model,
-                            use_kernel=bool(use_kernel))
-            self._csrs[fp] = csr
-            while len(self._csrs) > self.max_csrs:
-                self._csrs.popitem(last=False)
-        return csr, hit, fp
+        with self._lock:
+            csr = self._csrs.get(fp)
+            hit = csr is not None
+            if not hit:
+                csr = build_csr(result.graph, result.model,
+                                use_kernel=bool(use_kernel))
+                self._csrs.put(fp, csr)
+            return csr, hit, fp
 
     def analyze(self, model: GraphModel, algorithm: str = "pagerank",
                 method: str = "extgraph", use_kernel: Optional[bool] = None,
@@ -764,6 +893,8 @@ class ExtractionEngine:
                 f"unknown algorithm {algorithm!r}; "
                 f"have {sorted(ALGORITHMS)}")
         use_kernel = resolve_use_kernel(use_kernel)
+        with self._lock:
+            self.request_stats["analyzes"] += 1
 
         t0 = time.perf_counter()
         result = self.extract(model, method=method, verbose=verbose,

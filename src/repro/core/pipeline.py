@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import os
 import queue
 import threading
 import time
@@ -86,6 +87,53 @@ def clear_executable_cache() -> None:
     """Drop every AOT-compiled unit executable (process-wide store)."""
     with _CACHE_LOCK:
         _EXECUTABLE_CACHE.clear()
+
+
+# Opt-in on-disk XLA compilation cache ("cold-start elimination"): a
+# restarted server process re-lowers each unit but skips the XLA compile —
+# at SF=1 that is ~90% of a cold extract.  Enabled via the
+# REPRO_COMPILATION_CACHE env var or an explicit path (engine kwarg /
+# GraphService).  Process-global because the underlying JAX config is.
+PERSISTENT_CACHE_ENV = "REPRO_COMPILATION_CACHE"
+_PERSISTENT_CACHE_DIR: Optional[str] = None
+_PERSISTENT_CACHE_LOCK = threading.Lock()
+
+
+def enable_persistent_compilation_cache(
+        path: Optional[str] = None) -> Optional[str]:
+    """Point JAX's persistent compilation cache at ``path`` (opt-in).
+
+    ``path`` defaults to the ``REPRO_COMPILATION_CACHE`` environment
+    variable; when neither is set this is a no-op returning ``None``.
+    Thresholds are lowered so even SF=1-sized executables are persisted —
+    the point is eliminating cold-start compiles, not saving disk.
+    Idempotent; returns the directory in effect.
+    """
+    global _PERSISTENT_CACHE_DIR
+    path = path or os.environ.get(PERSISTENT_CACHE_ENV)
+    if not path:
+        return None
+    path = os.path.abspath(os.path.expanduser(path))
+    with _PERSISTENT_CACHE_LOCK:
+        if _PERSISTENT_CACHE_DIR == path:
+            return path
+        os.makedirs(path, exist_ok=True)
+        jax.config.update("jax_compilation_cache_dir", path)
+        for flag, value in (
+                ("jax_persistent_cache_min_compile_time_secs", 0.0),
+                ("jax_persistent_cache_min_entry_size_bytes", -1)):
+            try:
+                jax.config.update(flag, value)
+            except AttributeError:  # older jax: keep its default thresholds
+                pass
+        _PERSISTENT_CACHE_DIR = path
+    return path
+
+
+def persistent_compilation_cache_dir() -> Optional[str]:
+    """The directory enabled via :func:`enable_persistent_compilation_cache`
+    (``None`` when the feature is off)."""
+    return _PERSISTENT_CACHE_DIR
 
 
 def _submit_reopt(job) -> None:

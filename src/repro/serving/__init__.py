@@ -1,0 +1,27 @@
+# Multi-tenant serving layer over the extraction engine: async request
+# scheduling with single-flight coalescing, epoch-based MVCC snapshots
+# (readers never block on — or observe torn state from — the writer
+# building the next epoch), and per-tenant admission quotas + response
+# caches.  The HTTP front end lives in examples/serve_graphs.py.
+from repro.serving.quotas import QuotaExceeded, QuotaManager, TenantQuota
+from repro.serving.scheduler import AdmissionError, CoalescingScheduler
+from repro.serving.service import (
+    DEFAULT_TENANT,
+    GraphService,
+    UnknownModel,
+)
+from repro.serving.snapshots import Snapshot, SnapshotNotFound, SnapshotStore
+
+__all__ = [
+    "GraphService",
+    "DEFAULT_TENANT",
+    "UnknownModel",
+    "CoalescingScheduler",
+    "AdmissionError",
+    "QuotaManager",
+    "TenantQuota",
+    "QuotaExceeded",
+    "Snapshot",
+    "SnapshotStore",
+    "SnapshotNotFound",
+]

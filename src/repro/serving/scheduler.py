@@ -1,0 +1,130 @@
+"""Async request scheduler: single-flight coalescing + admission control.
+
+The high-traffic shape (GQ-Fast's observation) is many small concurrent
+requests, most of them identical: N users asking for the same
+(model, method, algorithm) at the same epoch.  The scheduler makes that
+cheap in two ways:
+
+* **Coalescing** — requests are keyed by their work identity; while a
+  future for a key is in flight, every further submit for the same key
+  *joins* it instead of enqueueing redundant work.  K concurrent identical
+  requests execute exactly once and share the result object.
+* **Admission control** — in-flight work is bounded by the worker pool and
+  the pending queue is bounded by ``max_queue``; a submit that finds the
+  queue full is rejected immediately with a ``retry_after`` hint
+  (EWMA of recent service time × queue depth) instead of growing memory
+  without bound.  Load shedding happens at the door, not by OOM.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Callable, Dict, Hashable, Tuple
+
+
+class AdmissionError(RuntimeError):
+    """Backpressure: the scheduler's pending queue is full.
+
+    ``retry_after`` (seconds) estimates when capacity frees up — the HTTP
+    front end maps this to ``429`` + ``Retry-After``.
+    """
+
+    def __init__(self, pending: int, max_queue: int, retry_after: float):
+        super().__init__(
+            f"queue full ({pending}/{max_queue} pending); "
+            f"retry in ~{retry_after:.2f}s")
+        self.pending = pending
+        self.max_queue = max_queue
+        self.retry_after = retry_after
+
+
+class CoalescingScheduler:
+    """Bounded thread-pool executor with single-flight request coalescing.
+
+    ``submit(key, fn)`` returns a :class:`concurrent.futures.Future`.
+    Futures are shared: while ``key`` is in flight, further submits return
+    the same future (and bump ``coalesced``).  Once a future completes its
+    key leaves the in-flight map — a later identical request re-executes
+    (by then the engine caches serve it warm, which is the cheap path the
+    coalescing window exists to protect during the expensive first build).
+    """
+
+    def __init__(self, max_workers: int = 4, max_queue: int = 64,
+                 name: str = "serving"):
+        self.max_workers = int(max_workers)
+        self.max_queue = int(max_queue)
+        self._pool = ThreadPoolExecutor(max_workers=self.max_workers,
+                                        thread_name_prefix=name)
+        self._lock = threading.Lock()
+        self._inflight: Dict[Hashable, Future] = {}
+        self._pending = 0            # submitted but not yet finished
+        self._ewma_s = 0.05          # recent service time estimate
+        self.submitted = 0
+        self.coalesced = 0
+        self.executed = 0
+        self.rejected = 0
+        self.failed = 0
+
+    # -- public API ----------------------------------------------------------
+    def submit(self, key: Hashable, fn: Callable[[], object]) -> Future:
+        """Run ``fn`` (or join the in-flight run of ``key``); may reject."""
+        return self.submit_ex(key, fn)[0]
+
+    def submit_ex(self, key: Hashable,
+                  fn: Callable[[], object]) -> Tuple[Future, bool]:
+        """Like :meth:`submit` but also reports whether the caller *joined*
+        an already-in-flight run (True) or started this one (False)."""
+        with self._lock:
+            self.submitted += 1
+            fut = self._inflight.get(key)
+            if fut is not None:
+                self.coalesced += 1
+                return fut, True
+            if self._pending >= self.max_queue:
+                self.rejected += 1
+                raise AdmissionError(self._pending, self.max_queue,
+                                     self.retry_after())
+            self._pending += 1
+            fut = self._pool.submit(self._run, key, fn)
+            self._inflight[key] = fut
+            return fut, False
+
+    def retry_after(self) -> float:
+        """Backoff hint: expected drain time of the work ahead of you."""
+        waves = max(1.0, self._pending / max(1, self.max_workers))
+        return round(self._ewma_s * waves, 3)
+
+    def stats(self) -> Dict[str, object]:
+        with self._lock:
+            return {"submitted": self.submitted,
+                    "coalesced": self.coalesced,
+                    "executed": self.executed,
+                    "rejected": self.rejected,
+                    "failed": self.failed,
+                    "inflight": len(self._inflight),
+                    "pending": self._pending,
+                    "max_workers": self.max_workers,
+                    "max_queue": self.max_queue,
+                    "ewma_service_s": round(self._ewma_s, 4)}
+
+    def shutdown(self, wait: bool = True) -> None:
+        self._pool.shutdown(wait=wait)
+
+    # -- internals -----------------------------------------------------------
+    def _run(self, key: Hashable, fn: Callable[[], object]) -> object:
+        t0 = time.perf_counter()
+        try:
+            out = fn()
+        except BaseException:
+            with self._lock:
+                self.failed += 1
+            raise
+        finally:
+            dt = time.perf_counter() - t0
+            with self._lock:
+                self.executed += 1
+                self._pending -= 1
+                self._inflight.pop(key, None)
+                self._ewma_s += 0.25 * (dt - self._ewma_s)
+        return out

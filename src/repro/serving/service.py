@@ -1,0 +1,353 @@
+"""`GraphService`: multi-tenant serving front for :class:`ExtractionEngine`.
+
+Composition of the three serving primitives::
+
+    requests ──► QuotaManager ──► CoalescingScheduler ──► SnapshotStore
+                 (per-tenant        (single-flight +         (epoch-pinned
+                  admission +        bounded queue)           MVCC reads)
+                  response LRU)
+
+* Reads (``extract`` / ``analyze``) resolve an epoch (latest unless the
+  caller pins one), coalesce on their work identity, and execute against
+  that epoch's immutable snapshot engine.  Responses are JSON-ready dicts
+  cached per tenant against that tenant's budget.
+* Writes (``mutate``) change-capture into the live database only; served
+  epochs never see them until ``refresh()`` builds the next snapshot *off
+  to the side* (engine fork + incremental refresh per registered model)
+  and publishes it with one atomic swap.  Readers pinned to an older
+  epoch keep serving bit-identical results from their snapshot.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from concurrent.futures import Future
+from typing import Dict, Hashable, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.api.engine import ExtractionEngine
+from repro.core.database import Database
+from repro.core.model import GraphModel, model_signature
+from repro.core.pipeline import (
+    PipelineCompiler,
+    persistent_compilation_cache_dir,
+)
+from repro.serving.quotas import QuotaManager, TenantQuota
+from repro.serving.scheduler import CoalescingScheduler
+from repro.serving.snapshots import Snapshot, SnapshotStore
+
+DEFAULT_TENANT = "public"
+
+ModelRef = Union[str, GraphModel]
+
+
+class UnknownModel(KeyError):
+    def __init__(self, name: str, available):
+        super().__init__(name)
+        self.name = name
+        self.available = sorted(available)
+
+    def __str__(self) -> str:
+        return f"unknown model {self.name!r} (have {self.available})"
+
+
+def _summarize_values(values) -> Dict[str, object]:
+    """JSON-ready summary of algorithm output (array or dict of arrays)."""
+    if isinstance(values, dict):
+        return {k: _summarize_values(v) for k, v in values.items()}
+    arr = np.asarray(values)
+    out: Dict[str, object] = {"shape": list(arr.shape),
+                              "dtype": str(arr.dtype)}
+    if arr.size:
+        out.update(min=float(arr.min()), max=float(arr.max()),
+                   mean=float(arr.mean()))
+    import hashlib
+    out["digest"] = hashlib.sha1(
+        np.ascontiguousarray(arr).tobytes()).hexdigest()[:16]
+    return out
+
+
+class GraphService:
+    """Long-lived multi-tenant serving session over one live database.
+
+    ``models`` maps serving names to :class:`GraphModel`\\ s; requests refer
+    to models by name (the HTTP front end only ever sees names).  Passing a
+    ``GraphModel`` to :meth:`extract`/:meth:`analyze` registers it under
+    its own ``model.name``.
+
+    The live ``db`` belongs to the service: mutate it through
+    :meth:`mutate` (or mutate it directly and call :meth:`refresh`) — the
+    epoch actually *served* only advances when :meth:`refresh` publishes.
+    """
+
+    def __init__(self, db: Database,
+                 models: Optional[Dict[str, GraphModel]] = None, *,
+                 compiler: Optional[PipelineCompiler] = None,
+                 compiled: bool = True,
+                 max_workers: int = 4,
+                 max_queue: int = 64,
+                 default_quota: Optional[TenantQuota] = None,
+                 tenant_quotas: Optional[Dict[str, TenantQuota]] = None,
+                 keep_snapshots: int = 2,
+                 refresh_threshold: float = 0.1,
+                 persistent_cache: Optional[str] = None,
+                 engine_opts: Optional[Dict[str, int]] = None):
+        self._db = db
+        self._db_lock = threading.RLock()     # guards live-db mutations
+        self._build_lock = threading.Lock()   # one epoch builder at a time
+        self._models: Dict[str, GraphModel] = dict(models or {})
+        opts = dict(engine_opts or {})
+        base_db = db.snapshot()
+        base_engine = ExtractionEngine(
+            base_db, compiler=compiler, compiled=compiled,
+            auto_refresh=False, refresh_threshold=refresh_threshold,
+            persistent_cache=persistent_cache, **opts)
+        self.compiler = base_engine.compiler
+        self._engine_opts = opts
+        self._store = SnapshotStore(
+            Snapshot(epoch=base_db.epoch, db=base_db, engine=base_engine),
+            keep=keep_snapshots)
+        self._scheduler = CoalescingScheduler(max_workers=max_workers,
+                                              max_queue=max_queue)
+        self._quotas = QuotaManager(default=default_quota,
+                                    per_tenant=tenant_quotas)
+        self.started_at = time.time()
+
+    # -- model registry ------------------------------------------------------
+    def register_model(self, name: str, model: GraphModel) -> None:
+        self._models[name] = model
+
+    def models(self):
+        return sorted(self._models)
+
+    def _resolve_model(self, model: ModelRef) -> Tuple[str, GraphModel]:
+        if isinstance(model, GraphModel):
+            self._models.setdefault(model.name, model)
+            return model.name, model
+        m = self._models.get(model)
+        if m is None:
+            raise UnknownModel(model, self._models)
+        return model, m
+
+    # -- write side ----------------------------------------------------------
+    def mutate(self, table: str, insert: Optional[Dict] = None,
+               delete_mask: Optional[np.ndarray] = None,
+               delete_where: Optional[Tuple[str, str, object]] = None
+               ) -> Dict[str, object]:
+        """Change-capture a mutation into the live database.
+
+        Served snapshots are untouched until :meth:`refresh` publishes the
+        next epoch.  Returns the live (unpublished) epoch.
+        """
+        with self._db_lock:
+            if delete_mask is not None:
+                self._db.delete_rows(table, np.asarray(delete_mask))
+            if delete_where is not None:
+                col, op, value = delete_where
+                self._db.delete_where(table, col, op, value)
+            if insert:
+                self._db.insert_rows(
+                    table, **{k: np.asarray(v) for k, v in insert.items()})
+            return {"table": table, "live_epoch": self._db.epoch,
+                    "served_epoch": self._store.current_epoch()}
+
+    def refresh(self) -> Dict[str, object]:
+        """Build the next epoch off to the side and publish it atomically.
+
+        The new snapshot's engine is a cache-warm fork of the current one;
+        every registered model is brought forward by the engine's
+        incremental refresh (delta propagation below the churn threshold,
+        full re-extract above it).  Readers pinned to older epochs are
+        never blocked and never observe intermediate state.
+        """
+        t0 = time.perf_counter()
+        with self._build_lock:
+            with self._db_lock:
+                new_db = self._db.snapshot()
+            with self._store.pin() as cur:
+                if new_db.epoch == cur.epoch:
+                    return {"path": "noop", "epoch": cur.epoch,
+                            "build_s": 0.0}
+                new_engine = cur.engine.fork(new_db)
+            paths: Dict[str, str] = {}
+            for name, model in sorted(self._models.items()):
+                res = new_engine.refresh(model)
+                paths[name] = res.refresh.path if res.refresh else "cold"
+            snap = self._store.publish(Snapshot(
+                epoch=new_db.epoch, db=new_db, engine=new_engine))
+            return {"path": "published", "epoch": snap.epoch,
+                    "models": paths,
+                    "build_s": round(time.perf_counter() - t0, 4)}
+
+    # -- read side -----------------------------------------------------------
+    def submit_extract(self, model: ModelRef, method: str = "extgraph",
+                       tenant: str = DEFAULT_TENANT,
+                       epoch: Optional[int] = None
+                       ) -> Tuple[Future, Dict[str, object]]:
+        """Schedule an extract; returns ``(future, request_meta)``.
+
+        Raises :class:`QuotaExceeded` / :class:`AdmissionError` at the door
+        (never after work started).  The future resolves to the shared
+        JSON-ready payload; ``request_meta`` carries per-request facts
+        (coalesced / cache source / epoch) that are not shared.
+        """
+        name, m = self._resolve_model(model)
+        key = ("extract", name, model_signature(m), method)
+
+        def work(snap: Snapshot) -> Dict[str, object]:
+            res = snap.engine.extract(m, method=method)
+            g = res.graph
+            return {
+                "kind": "extract", "model": name, "method": method,
+                "epoch": snap.epoch,
+                "fingerprint": g.fingerprint(),
+                "vertices": {k: int(np.asarray(t.valid).sum())
+                             for k, t in g.vertices.items()},
+                "edges": {k: int(np.asarray(t.valid).sum())
+                          for k, t in g.edges.items()},
+                "plan_cache_hit": bool(res.provenance.plan_cache_hit),
+                "views_reused": list(res.provenance.views_reused),
+                "timings_s": {"plan": res.timings.plan_s,
+                              "extract": res.timings.extract_s},
+            }
+
+        return self._admit_and_submit(tenant, key, epoch, work)
+
+    def submit_analyze(self, model: ModelRef, algorithm: str = "pagerank",
+                       method: str = "extgraph",
+                       tenant: str = DEFAULT_TENANT,
+                       epoch: Optional[int] = None,
+                       **params) -> Tuple[Future, Dict[str, object]]:
+        """Schedule extract+algorithm; returns ``(future, request_meta)``."""
+        name, m = self._resolve_model(model)
+        pkey = tuple(sorted((k, repr(v)) for k, v in params.items()))
+        key = ("analyze", name, model_signature(m), method, algorithm, pkey)
+
+        def work(snap: Snapshot) -> Dict[str, object]:
+            res = snap.engine.analyze(m, algorithm=algorithm, method=method,
+                                      **params)
+            return {
+                "kind": "analyze", "model": name, "method": method,
+                "algorithm": algorithm, "epoch": snap.epoch,
+                "fingerprint": res.extraction.graph.fingerprint(),
+                "csr_cache_hit": bool(res.provenance.csr_cache_hit),
+                "values": _summarize_values(res.values),
+                "timings_s": {"extract": res.timings.extract_s,
+                              "csr_build": res.timings.csr_build_s,
+                              "analyze": res.timings.analyze_s},
+            }
+
+        return self._admit_and_submit(tenant, key, epoch, work)
+
+    def extract(self, model: ModelRef, method: str = "extgraph",
+                tenant: str = DEFAULT_TENANT, epoch: Optional[int] = None,
+                timeout: Optional[float] = None) -> Dict[str, object]:
+        """Blocking :meth:`submit_extract`; merges per-request meta in."""
+        fut, meta = self.submit_extract(model, method=method, tenant=tenant,
+                                        epoch=epoch)
+        return {**fut.result(timeout), **meta}
+
+    def analyze(self, model: ModelRef, algorithm: str = "pagerank",
+                method: str = "extgraph", tenant: str = DEFAULT_TENANT,
+                epoch: Optional[int] = None,
+                timeout: Optional[float] = None,
+                **params) -> Dict[str, object]:
+        """Blocking :meth:`submit_analyze`; merges per-request meta in."""
+        fut, meta = self.submit_analyze(model, algorithm=algorithm,
+                                        method=method, tenant=tenant,
+                                        epoch=epoch, **params)
+        return {**fut.result(timeout), **meta}
+
+    # -- shared submit plumbing ----------------------------------------------
+    def _admit_and_submit(self, tenant: str, base_key: Hashable,
+                          epoch: Optional[int], work
+                          ) -> Tuple[Future, Dict[str, object]]:
+        self._quotas.admit(tenant)
+        try:
+            pin_ctx = self._store.pin(epoch)
+            snap = pin_ctx.__enter__()
+        except BaseException:
+            self._quotas.release(tenant)
+            raise
+        key = (snap.epoch,) + (base_key if isinstance(base_key, tuple)
+                               else (base_key,))
+        meta: Dict[str, object] = {"tenant": tenant, "coalesced": False,
+                                   "source": "computed"}
+
+        cached = self._quotas.cached(tenant, key)
+        if cached is not None:
+            pin_ctx.__exit__(None, None, None)
+            self._quotas.release(tenant)
+            fut: Future = Future()
+            fut.set_result(cached)
+            meta["source"] = "tenant-cache"
+            return fut, meta
+
+        try:
+            fut, joined = self._scheduler.submit_ex(key, lambda: work(snap))
+        except BaseException:
+            pin_ctx.__exit__(None, None, None)
+            self._quotas.release(tenant)
+            raise
+
+        if joined:
+            # the original submission's pin keeps this epoch alive
+            pin_ctx.__exit__(None, None, None)
+            meta["coalesced"] = True
+            meta["source"] = "coalesced"
+
+            def on_joined_done(f: Future) -> None:
+                self._quotas.release(tenant)
+                try:
+                    payload = f.result()
+                except BaseException:
+                    return
+                self._quotas.record(tenant, key, payload,
+                                    len(json.dumps(payload)))
+
+            fut.add_done_callback(on_joined_done)
+            return fut, meta
+
+        def on_done(f: Future) -> None:
+            pin_ctx.__exit__(None, None, None)
+            self._quotas.release(tenant)
+            try:
+                payload = f.result()
+            except BaseException:
+                return
+            self._quotas.record(tenant, key, payload,
+                                len(json.dumps(payload)))
+
+        fut.add_done_callback(on_done)
+        return fut, meta
+
+    # -- observability / lifecycle -------------------------------------------
+    def stats(self) -> Dict[str, object]:
+        """One structure for the stats endpoint and the benchmarks."""
+        with self._store.pin() as snap:
+            engine_info = snap.engine.cache_info()
+        with self._db_lock:
+            live_epoch = self._db.epoch
+        return {
+            "served_epoch": self._store.current_epoch(),
+            "live_epoch": live_epoch,
+            "models": self.models(),
+            "snapshots": self._store.stats(),
+            "scheduler": self._scheduler.stats(),
+            "tenants": self._quotas.stats(),
+            "engine": engine_info,
+            "persistent_compilation_cache":
+                persistent_compilation_cache_dir(),
+            "uptime_s": round(time.time() - self.started_at, 1),
+        }
+
+    def close(self) -> None:
+        self._scheduler.shutdown(wait=True)
+
+    def __enter__(self) -> "GraphService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

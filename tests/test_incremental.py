@@ -6,6 +6,8 @@ views and the kernel/bloom probe path), or full fallback — the bag digests
 of every vertex/edge table must be bit-identical to a from-scratch extract
 over the mutated database.
 """
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -184,9 +186,11 @@ def test_view_staleness_uses_changelog_not_fingerprint(monkeypatch):
     _churn_tpcds(db, rng, n_ins=6, n_del=6)
     # simulate the fingerprint collision: overwrite the stored digests
     # with the post-mutation ones, so only the changelog can tell
-    for cv in engine._views.values():
-        cv.base_fingerprints = {
-            t: engine._table_fingerprint(t) for t in cv.base_fingerprints}
+    # (cache entries are frozen — replace them, as refresh itself does)
+    for sig, cv in list(engine._views.items()):
+        cv = dataclasses.replace(cv, base_fingerprints={
+            t: engine._table_fingerprint(t) for t in cv.base_fingerprints})
+        engine._views.put(sig, cv)
         assert engine._view_bases_mutated(cv)   # epoch signal still fires
     r = engine.extract(model)
     assert r.refresh.path == "delta"
