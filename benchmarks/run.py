@@ -15,6 +15,7 @@ import traceback
 def modules():
     from benchmarks import (
         bench_breakdown,
+        bench_discovery,
         bench_engine,
         bench_extract,
         bench_fraud,
@@ -40,6 +41,7 @@ def modules():
         ("extract_pipeline", bench_extract),
         ("incremental_refresh", bench_incremental),
         ("serving", bench_serving),
+        ("discovery", bench_discovery),
         ("kernels", bench_kernels),
     ]
 
@@ -48,7 +50,7 @@ def modules():
 # artifact parses and carries its speedup fields — so benchmark scripts
 # can't silently rot (the way the `_VERTS` import break did pre-CI).
 SMOKE_MODULES = ("engine_warm_vs_cold", "graph_analytics", "extract_pipeline",
-                 "incremental_refresh", "serving")
+                 "incremental_refresh", "serving", "discovery")
 SMOKE_FIELDS = {
     "engine_warm_vs_cold": ("cold_s", "warm_s", "speedup"),
     "graph_analytics": ("cold_s", "warm_s", "speedup"),
@@ -58,6 +60,8 @@ SMOKE_FIELDS = {
     "incremental_refresh": ("cold_s", "refresh_s", "speedup"),
     "serving": ("concurrency", "p50_ms", "p99_ms", "rps",
                 "speedup_vs_serial"),
+    "discovery": ("discovery_s", "warm_s", "precision", "recall",
+                  "edge_recall", "containment_checks"),
 }
 
 

@@ -10,8 +10,10 @@ Endpoints (tenant comes from the ``X-Tenant`` header, default "public"):
     GET  /healthz                     liveness + served epoch
     GET  /v1/stats                    snapshots/scheduler/tenants/engine
     GET  /v1/models                   registered model names
-    POST /v1/extract    {"model": name, "method"?, "epoch"?}
+    POST /v1/extract    {"model": name | spec, "method"?, "epoch"?}
     POST /v1/analyze    {"model": name, "algorithm"?, "params"?, "epoch"?}
+    POST /v1/discover   {"tables"?: [...], "sample"?, "use_name_hints"?,
+                         "accept_threshold"?, "top"?, "epoch"?}
     POST /v1/mutate     {"table": name, "insert"?: {col: [...]},
                          "delete_where"?: [col, op, value]}
     POST /v1/refresh    {}            build + publish the next epoch
@@ -130,6 +132,17 @@ class GraphRequestHandler(BaseHTTPRequestHandler):
                                   tenant=self.tenant,
                                   epoch=req.get("epoch"),
                                   **(req.get("params") or {}))
+                self._send(200, out)
+            elif self.path == "/v1/discover":
+                out = svc.discover(
+                    req.get("tables"),
+                    sample=int(req.get("sample", 512)),
+                    use_name_hints=bool(req.get("use_name_hints", True)),
+                    accept_threshold=float(
+                        req.get("accept_threshold", 0.5)),
+                    top=req.get("top"),
+                    tenant=self.tenant,
+                    epoch=req.get("epoch"))
                 self._send(200, out)
             elif self.path == "/v1/mutate":
                 insert = req.get("insert")

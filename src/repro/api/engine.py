@@ -355,6 +355,11 @@ class ExtractionEngine:
         # last materialized result per (model signature, method) — what
         # refresh() propagates deltas into
         self._results: "_LRUCache" = _LRUCache(max_results)
+        # schema discovery state: per-table column profiles keyed by stats
+        # fingerprint (survive unrelated churn), and whole discovery
+        # results keyed by (tables, their fingerprints, knobs)
+        self._profiles: "_LRUCache" = _LRUCache(64)
+        self._discoveries: "_LRUCache" = _LRUCache(8)
         # request counters (cache_info "requests"): how often each public
         # path actually executed work, which is what serving's coalescing
         # tests read to prove single-flight
@@ -373,6 +378,8 @@ class ExtractionEngine:
             self._views.clear()
             self._csrs.clear()
             self._results.clear()
+            self._profiles.clear()
+            self._discoveries.clear()
             if self._owns_compiler:
                 self.compiler.clear()
 
@@ -400,7 +407,9 @@ class ExtractionEngine:
                     "caches": {"plans": self._plans.info(),
                                "views": self._views.info(),
                                "csrs": self._csrs.info(),
-                               "results": self._results.info()},
+                               "results": self._results.info(),
+                               "profiles": self._profiles.info(),
+                               "discoveries": self._discoveries.info()},
                     "requests": dict(self.request_stats)}
 
     def fork(self, db: Database) -> "ExtractionEngine":
@@ -427,6 +436,8 @@ class ExtractionEngine:
             clone._views.seed(self._views)
             clone._csrs.seed(self._csrs)
             clone._results.seed(self._results)
+            clone._profiles.seed(self._profiles)
+            clone._discoveries.seed(self._discoveries)
             return clone
 
     def _table_fingerprint(self, table: str) -> Optional[Fingerprint]:
@@ -845,6 +856,58 @@ class ExtractionEngine:
                 rows_changed=rows_changed,
                 views_maintained=tuple(maintained),
                 csr_patched=csr_patched))
+
+    # -- schema discovery ----------------------------------------------------
+    def discover(self, tables: Optional[List[str]] = None, *,
+                 sample: int = 512, sketch_k: Optional[int] = None,
+                 key_threshold: float = 0.9, accept_threshold: float = 0.5,
+                 use_name_hints: bool = True, max_joins: int = 5,
+                 seed: int = 0):
+        """Profile the database and propose ranked :class:`GraphModel`
+        candidates (see :mod:`repro.discovery`).
+
+        Two caches make a warm session cheap: per-table column profiles
+        are keyed by the table's stats fingerprint (so churn in one table
+        never re-sketches the others), and whole
+        :class:`~repro.discovery.DiscoveryResult`\\ s are keyed by the
+        profiled tables' joint fingerprint plus every knob — a repeated
+        ``discover()`` on an unchanged catalog is a dictionary lookup, no
+        containment pipelines run.  Containment checks go through this
+        engine's :class:`PipelineCompiler` (``compiled=False`` falls back
+        to the eager reference path).
+        """
+        from repro.discovery import discover as run_discovery
+        from repro.discovery.profile import SKETCH_K, profile_table
+        k = SKETCH_K if sketch_k is None else int(sketch_k)
+        with self._lock:
+            self.request_stats["discovers"] += 1
+            names = tuple(sorted(self.db.tables) if tables is None
+                          else sorted(set(tables)))
+            dkey = (names, self.db.fingerprint(names), int(sample), k,
+                    float(key_threshold), float(accept_threshold),
+                    bool(use_name_hints), int(max_joins), int(seed))
+            cached = self._discoveries.get(dkey)
+            if cached is not None:
+                return cached
+
+            def profile_fn(name: str):
+                pkey = (name, self._table_fingerprint(name), k)
+                prof = self._profiles.get(pkey)
+                if prof is None:
+                    prof = profile_table(name, self.db.tables[name],
+                                         self.db.stats[name], k=k)
+                    self._profiles.put(pkey, prof)
+                return prof
+
+            result = run_discovery(
+                self.db, names,
+                compiler=self.compiler if self.compiled else None,
+                sample=sample, sketch_k=k, key_threshold=key_threshold,
+                accept_threshold=accept_threshold,
+                use_name_hints=use_name_hints, max_joins=max_joins,
+                seed=seed, profile_fn=profile_fn)
+            self._discoveries.put(dkey, result)
+            return result
 
     # -- analytics -----------------------------------------------------------
     def _csr_for(self, result: ExtractionResult, use_kernel: bool = False

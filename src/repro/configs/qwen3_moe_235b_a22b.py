@@ -14,5 +14,10 @@ SMOKE = ArchConfig(
     name="qwen3-moe-235b-a22b-smoke", family="moe",
     num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
     d_ff=32, vocab_size=512, mlp="swiglu",
-    moe=MoESpec(num_experts=8, top_k=2, d_expert=32), tie_embeddings=False,
+    # capacity_factor 4.0: at smoke shapes (B=2, S=16) the default 1.25
+    # lets a hot expert overflow, and dropped tokens make the batched
+    # forward disagree with per-token decode (which never drops) — the
+    # prefill/decode consistency contract only holds drop-free
+    moe=MoESpec(num_experts=8, top_k=2, d_expert=32, capacity_factor=4.0),
+    tie_embeddings=False,
 )

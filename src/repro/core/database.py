@@ -91,16 +91,19 @@ def _stats_after_insert(st: TableStats, plus: TableStats) -> TableStats:
 def _stats_after_delete(st: TableStats, minus_rows: int) -> TableStats:
     """Scale NDV with the surviving fraction (uniform-deletion model).
 
-    Min/max stay put — deletion can only shrink the true range, so the
-    stored range remains a valid (conservative) bound.
+    Min/max stay put while rows survive — deletion can only shrink the
+    true range, so the stored range remains a valid (conservative) bound.
+    When the table empties, the old range bounds nothing: minmax is
+    cleared and NDV drops to 0, so a later insert re-seeds both from the
+    inserted rows alone instead of inheriting stale extrema.
     """
     rows = max(0, st.rows - minus_rows)
-    if st.rows > 0:
-        frac = rows / st.rows
-        distinct = {c: max(1, min(rows, int(round(n * frac))))
-                    for c, n in st.distinct.items()}
-    else:
-        distinct = dict(st.distinct)
+    if rows == 0:
+        return TableStats(rows=0, distinct={c: 0 for c in st.distinct},
+                          width=st.width, minmax={})
+    frac = rows / st.rows
+    distinct = {c: max(1, min(rows, int(round(n * frac))))
+                for c, n in st.distinct.items()}
     return TableStats(rows=rows, distinct=distinct, width=st.width,
                       minmax=dict(st.minmax))
 

@@ -19,6 +19,7 @@ Composition of the three serving primitives::
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import threading
 import time
@@ -27,6 +28,7 @@ from typing import Dict, Hashable, Optional, Tuple, Union
 
 import numpy as np
 
+from repro.api.builder import model_from_spec
 from repro.api.engine import ExtractionEngine
 from repro.core.database import Database
 from repro.core.model import GraphModel, model_signature
@@ -40,7 +42,7 @@ from repro.serving.snapshots import Snapshot, SnapshotStore
 
 DEFAULT_TENANT = "public"
 
-ModelRef = Union[str, GraphModel]
+ModelRef = Union[str, GraphModel, Dict]
 
 
 class UnknownModel(KeyError):
@@ -126,6 +128,22 @@ class GraphService:
         if isinstance(model, GraphModel):
             self._models.setdefault(model.name, model)
             return model.name, model
+        if isinstance(model, dict):
+            # Inline JSON spec — e.g. a /v1/discover ``model_spec`` posted
+            # straight back.  Registered under its own name so later
+            # requests can address it by name alone; a name that is already
+            # taken by a *different* model gets a signature-suffixed key
+            # rather than silently shadowing (or being shadowed by) it.
+            built = model_from_spec(model)
+            name = built.name
+            existing = self._models.get(name)
+            if existing is not None and (model_signature(existing)
+                                         != model_signature(built)):
+                digest = hashlib.sha1(
+                    repr(model_signature(built)).encode()).hexdigest()[:8]
+                name = f"{name}@{digest}"
+            self._models.setdefault(name, built)
+            return name, self._models[name]
         m = self._models.get(model)
         if m is None:
             raise UnknownModel(model, self._models)
@@ -241,6 +259,53 @@ class GraphService:
 
         return self._admit_and_submit(tenant, key, epoch, work)
 
+    def submit_discover(self, tables: Optional[list] = None, *,
+                        sample: int = 512, use_name_hints: bool = True,
+                        accept_threshold: float = 0.5,
+                        top: Optional[int] = None,
+                        tenant: str = DEFAULT_TENANT,
+                        epoch: Optional[int] = None
+                        ) -> Tuple[Future, Dict[str, object]]:
+        """Schedule schema-to-graph discovery; returns ``(future, meta)``.
+
+        Runs :meth:`ExtractionEngine.discover` against the pinned epoch's
+        snapshot, so concurrent identical requests coalesce to one pass
+        and a published mutation (new epoch) naturally re-keys the work.
+        The payload is JSON-ready: accepted FKs, ranked edge candidates
+        (``top`` trims the ranking), and a ``model_spec`` the client can
+        POST straight back to ``/v1/extract`` after review.
+        """
+        tkey = tuple(sorted(set(tables))) if tables else None
+        key = ("discover", tkey, int(sample), bool(use_name_hints),
+               float(accept_threshold), None if top is None else int(top))
+
+        def work(snap: Snapshot) -> Dict[str, object]:
+            res = snap.engine.discover(
+                list(tkey) if tkey else None, sample=sample,
+                use_name_hints=use_name_hints,
+                accept_threshold=accept_threshold)
+            edges = res.edges if top is None else res.edges[:top]
+            return {
+                "kind": "discover", "epoch": snap.epoch,
+                "tables": list(res.params["tables"]),
+                "fks": [{"child": f"{c.child_table}.{c.child_col}",
+                         "parent": f"{c.parent_table}.{c.parent_col}",
+                         "confidence": round(c.confidence, 4),
+                         "containment": [c.matched, c.sampled],
+                         "compiled": bool(c.compiled)}
+                        for c in res.fks],
+                "vertices": [{"label": v.label, "table": v.table,
+                              "id_col": v.id_col,
+                              "confidence": round(v.confidence, 4)}
+                             for v in res.vertices],
+                "edges": [e.spec() for e in edges],
+                "model_spec": res.model_spec(top=top),
+                "stats": dict(res.stats),
+                "timings_s": dict(res.timings),
+            }
+
+        return self._admit_and_submit(tenant, key, epoch, work)
+
     def extract(self, model: ModelRef, method: str = "extgraph",
                 tenant: str = DEFAULT_TENANT, epoch: Optional[int] = None,
                 timeout: Optional[float] = None) -> Dict[str, object]:
@@ -258,6 +323,18 @@ class GraphService:
         fut, meta = self.submit_analyze(model, algorithm=algorithm,
                                         method=method, tenant=tenant,
                                         epoch=epoch, **params)
+        return {**fut.result(timeout), **meta}
+
+    def discover(self, tables: Optional[list] = None, *,
+                 sample: int = 512, use_name_hints: bool = True,
+                 accept_threshold: float = 0.5, top: Optional[int] = None,
+                 tenant: str = DEFAULT_TENANT, epoch: Optional[int] = None,
+                 timeout: Optional[float] = None) -> Dict[str, object]:
+        """Blocking :meth:`submit_discover`; merges per-request meta in."""
+        fut, meta = self.submit_discover(
+            tables, sample=sample, use_name_hints=use_name_hints,
+            accept_threshold=accept_threshold, top=top, tenant=tenant,
+            epoch=epoch)
         return {**fut.result(timeout), **meta}
 
     # -- shared submit plumbing ----------------------------------------------

@@ -143,6 +143,64 @@ def test_mutation_api_updates_stats_incrementally():
     assert st == compute_stats(db.tables["t"])
 
 
+def test_delete_to_empty_clears_minmax_and_ndv():
+    # delete-only deltas must not leave stale minmax: an emptied table's
+    # old range bounds nothing (discovery profiles read minmax as a
+    # range-fit signal, so a stale (0, 5) on an empty-then-refilled table
+    # would mis-score every FK candidate against it)
+    db = Database({"t": Table.from_arrays(
+        rid=np.arange(6, dtype=np.int32),
+        k=(np.arange(6, dtype=np.int32) % 2))})
+    db.delete_rows("t", np.arange(6))
+    st = db.stats["t"]
+    assert st.rows == 0
+    assert st.minmax == {}
+    assert set(st.distinct) == {"rid", "k"}
+    assert all(n == 0 for n in st.distinct.values())
+    # a later insert re-seeds both from the inserted rows alone
+    db.insert_rows("t", rid=np.array([50, 51], np.int32),
+                   k=np.array([9, 9], np.int32))
+    st = db.stats["t"]
+    assert st.rows == 2
+    assert st.minmax["rid"] == (50, 51)
+    assert st.minmax["k"] == (9, 9)
+    assert st.distinct["rid"] == 2
+    assert st.distinct["k"] == 1
+
+
+def test_incremental_ndv_bounded_under_mixed_churn():
+    # the approximation may drift, but must keep its contract: NDV in
+    # [1, rows] per column, and minmax a conservative superset of the
+    # true range — the invariants the cost model and discovery rely on
+    rng = np.random.default_rng(0)
+    db = Database({"t": Table.from_arrays(
+        rid=np.arange(256, dtype=np.int32),
+        k=rng.integers(0, 32, 256).astype(np.int32))})
+    next_rid = 256
+    for _ in range(12):
+        n = 16
+        db.insert_rows(
+            "t", rid=np.arange(next_rid, next_rid + n, dtype=np.int32),
+            k=rng.integers(0, 32, n).astype(np.int32))
+        next_rid += n
+        live = np.flatnonzero(np.asarray(db.tables["t"].valid))
+        mask = np.zeros(db.tables["t"].capacity, dtype=bool)
+        mask[rng.choice(live, n, replace=False)] = True
+        db.delete_rows("t", mask)
+    st = db.stats["t"]
+    exact = compute_stats(db.tables["t"])
+    assert st.rows == exact.rows == 256
+    for c in ("rid", "k"):
+        assert 1 <= st.distinct[c] <= st.rows
+        assert st.minmax[c][0] <= exact.minmax[c][0]
+        assert st.minmax[c][1] >= exact.minmax[c][1]
+    # the low-cardinality column's estimate stays the right order of
+    # magnitude (true NDV 32): uniform-deletion scaling must not collapse
+    # it to 1 or inflate it toward the row count
+    assert exact.distinct["k"] // 4 <= st.distinct["k"] \
+        <= 4 * exact.distinct["k"]
+
+
 def test_rows_like_minus_bag_cancels():
     db = Database({"t": Table.from_arrays(
         rid=np.array([1, 1, 2], np.int32))})

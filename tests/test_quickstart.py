@@ -30,3 +30,7 @@ def test_quickstart_runs_end_to_end(capsys):
     # the mutate-then-refresh step took the delta path and stayed exact
     assert "refresh path=delta" in out
     assert "refreshed analyze matches cold engine: True" in out
+    # step 8: discovery proposed a model and it extracted non-trivially
+    assert "all_compiled=True" in out
+    assert "accepted top-3 spec, extracted:" in out
+    assert "degree_stats over the discovered graph:" in out
