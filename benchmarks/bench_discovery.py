@@ -31,6 +31,7 @@ import time
 from typing import List
 
 from benchmarks.common import SFS, Row
+from repro import obs
 from repro.api import ExtractionEngine
 from repro.core.pipeline import PipelineCompiler
 from repro.discovery import (
@@ -90,7 +91,9 @@ def run() -> List[Row]:
         engine = ExtractionEngine(adb, compiler=PipelineCompiler())
 
         t0 = time.perf_counter()
-        res = engine.discover(use_name_hints=False)
+        res, cold_bd = obs.traced_call(
+            "bench.discovery.cold",
+            lambda: engine.discover(use_name_hints=False), dataset=name)
         discovery_s = time.perf_counter() - t0
 
         t0 = time.perf_counter()
@@ -134,6 +137,7 @@ def run() -> List[Row]:
             "edge_recall": er["recall"],
             "edge_worst_rank": int(er["worst_rank"]),
             "missing_edges": list(er["missing"]),
+            "breakdown": cold_bd,
         })
     with open(JSON_PATH, "w") as f:
         json.dump(trajectory, f, indent=2)

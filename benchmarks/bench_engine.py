@@ -15,6 +15,7 @@ import os
 from typing import List
 
 from benchmarks.common import REPEATS, SFS, Row
+from repro import obs
 from repro.api import ExtractionEngine
 from repro.core.pipeline import drain_reoptimizations
 from repro.data import make_tpcds, recommendation_model
@@ -30,13 +31,16 @@ def run() -> List[Row]:
         engine = ExtractionEngine(db)
         model = recommendation_model("store")
 
-        cold = engine.extract(model)
+        cold, cold_bd = obs.traced_call(
+            "bench.engine.cold", engine.extract, model, sf=sf)
         drain_reoptimizations()   # steady state: background rebuilds landed
-        warm = engine.extract(model)
+        warm, warm_bd = obs.traced_call(
+            "bench.engine.warm", engine.extract, model, sf=sf)
         for _ in range(max(0, REPEATS - 1)):  # steady state, best-of-N
-            again = engine.extract(model)
+            again, again_bd = obs.traced_call(
+                "bench.engine.warm", engine.extract, model, sf=sf)
             if again.timings.total_s < warm.timings.total_s:
-                warm = again
+                warm, warm_bd = again, again_bd
 
         assert warm.provenance.plan_cache_hit
         record = {
@@ -49,6 +53,8 @@ def run() -> List[Row]:
             "plan_cache_hit": warm.provenance.plan_cache_hit,
             "views_built_cold": list(cold.provenance.views_built),
             "views_reused_warm": list(warm.provenance.views_reused),
+            "breakdown": cold_bd,
+            "breakdown_warm": warm_bd,
         }
         trajectory.append(record)
         rows.append((f"engine/rec_store_sf{sf}_cold",

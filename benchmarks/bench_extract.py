@@ -29,6 +29,7 @@ from typing import List
 import jax
 
 from benchmarks.common import SFS, Row
+from repro import obs
 from repro.api import ExtractionEngine
 from repro.core.pipeline import (
     PipelineCompiler,
@@ -75,14 +76,18 @@ def run() -> List[Row]:
             clear_build_cache()   # csr_cold_build_s must pay its compile
             comp = PipelineCompiler()
             engine = ExtractionEngine(db, compiler=comp)
-            cold = engine.extract(model, method=method)
+            cold, cold_bd = obs.traced_call(
+                "bench.extract.cold",
+                lambda: engine.extract(model, method=method), method=method)
             cold_compile_s = comp.stats["compile_s"]
             csr_cold_s = _timed_csr(cold, model)
 
             # -- second cold query: warm executables, cold data -----------
             drain_reoptimizations()   # steady state: reopt swaps landed
-            second = ExtractionEngine(db2, compiler=comp).extract(
-                model, method=method)
+            second, second_bd = obs.traced_call(
+                "bench.extract.second_cold",
+                lambda: ExtractionEngine(db2, compiler=comp).extract(
+                    model, method=method), method=method)
 
             record = {
                 "sf": sf,
@@ -104,6 +109,8 @@ def run() -> List[Row]:
                     eager.timings.extract_s / cold.timings.extract_s,
                 "speedup_second_cold":
                     eager.timings.extract_s / second.timings.extract_s,
+                "breakdown": cold_bd,
+                "breakdown_second": second_bd,
             }
             trajectory.append(record)
             rows.append((f"extract/{method}_sf{sf}_eager",

@@ -15,6 +15,7 @@ import os
 from typing import List
 
 from benchmarks.common import REPEATS, SFS, Row
+from repro import obs
 from repro.api import ExtractionEngine
 from repro.core.pipeline import drain_reoptimizations
 from repro.data import fraud_model, make_tpcds
@@ -37,15 +38,24 @@ def run() -> List[Row]:
             # fresh engine per algorithm so "cold" really is cold (only the
             # process-wide jit cache persists, as in the other benches)
             engine = ExtractionEngine(db)
-            cold = engine.analyze(model, algorithm=algo, **params)
+            cold, cold_bd = obs.traced_call(
+                "bench.graph.cold",
+                lambda: engine.analyze(model, algorithm=algo, **params),
+                algorithm=algo)
             # warm numbers are steady state: let the tiered cold compiles
             # finish their background full-opt rebuilds first
             drain_reoptimizations()
-            warm = engine.analyze(model, algorithm=algo, **params)
+            warm, warm_bd = obs.traced_call(
+                "bench.graph.warm",
+                lambda: engine.analyze(model, algorithm=algo, **params),
+                algorithm=algo)
             for _ in range(max(0, REPEATS - 1)):  # steady state, best-of-N
-                again = engine.analyze(model, algorithm=algo, **params)
+                again, again_bd = obs.traced_call(
+                    "bench.graph.warm",
+                    lambda: engine.analyze(model, algorithm=algo, **params),
+                    algorithm=algo)
                 if again.timings.total_s < warm.timings.total_s:
-                    warm = again
+                    warm, warm_bd = again, again_bd
 
             assert warm.provenance.csr_cache_hit, "warm CSR must not rebuild"
             assert warm.provenance.extraction.plan_cache_hit
@@ -61,6 +71,8 @@ def run() -> List[Row]:
                 "speedup": cold.timings.total_s / warm.timings.total_s,
                 "csr_cache_hit_warm": warm.provenance.csr_cache_hit,
                 "csr_key": warm.provenance.csr_key,
+                "breakdown": cold_bd,
+                "breakdown_warm": warm_bd,
             }
             trajectory.append(record)
             rows.append((f"graph/{algo}_sf{sf}_cold",

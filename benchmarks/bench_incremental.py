@@ -29,6 +29,7 @@ from typing import List
 import numpy as np
 
 from benchmarks.common import REPEATS, SFS, Row
+from repro import obs
 from repro.api import ExtractionEngine
 from repro.core.database import Database
 from repro.core.pipeline import (
@@ -89,15 +90,17 @@ def run() -> List[Row]:
             for _ in range(2):
                 _churn(db, rng, frac)
                 engine.extract(model)
-            best_refresh, refreshed = None, None
+            best_refresh, refreshed, best_bd = None, None, None
             delta_rows = 0
             for _ in range(max(1, REPEATS)):
                 delta_rows = _churn(db, rng, frac)
                 t0 = time.perf_counter()
-                refreshed = engine.extract(model)
+                refreshed, bd = obs.traced_call(
+                    "bench.incremental.refresh", engine.extract, model,
+                    churn=frac)
                 dt = time.perf_counter() - t0
                 if best_refresh is None or dt < best_refresh:
-                    best_refresh = dt
+                    best_refresh, best_bd = dt, bd
             cold_s, cold_fp = _cold_extract_s(db, model)
             assert refreshed.graph.fingerprint() == cold_fp, \
                 "refresh() diverged from the cold extract"
@@ -114,6 +117,7 @@ def run() -> List[Row]:
                 "cold_s": cold_s,
                 "refresh_s": best_refresh,
                 "speedup": speedup,
+                "breakdown": best_bd,
             })
     with open(JSON_PATH, "w") as f:
         json.dump(trajectory, f, indent=2)

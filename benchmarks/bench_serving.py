@@ -33,11 +33,65 @@ from typing import List
 import numpy as np
 
 from benchmarks.common import REPEATS, SFS, Row
+from repro import obs
 from repro.data import make_dblp
 from repro.data.dblp import dblp_model
 from repro.serving import GraphService, TenantQuota
 
 JSON_PATH = os.environ.get("REPRO_BENCH_SERVING_JSON", "BENCH_serving.json")
+
+_PROBE_SEQ = iter(range(10 ** 9))
+
+
+def _serve_module():
+    """``examples.serve_graphs`` whether or not the repo root is on path."""
+    try:
+        from examples import serve_graphs
+        return serve_graphs
+    except ImportError:
+        import importlib.util
+        path = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "examples", "serve_graphs.py")
+        spec = importlib.util.spec_from_file_location("serve_graphs", path)
+        mod = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(mod)
+        return mod
+
+
+def _metrics_roundtrip(service: GraphService) -> dict:
+    """Spin the HTTP front end and pull ``/v1/metrics`` in both formats.
+
+    The smoke contract: the JSON snapshot parses with at least the serving
+    families present, and the Prometheus text format parses line-by-line
+    (``# HELP``/``# TYPE``/``name{labels} value``).
+    """
+    import urllib.request
+
+    serve_graphs = _serve_module()
+    server = serve_graphs.make_server(service)
+    host, port = server.server_address[:2]
+    thread = threading.Thread(target=server.serve_forever, daemon=True)
+    thread.start()
+    try:
+        with urllib.request.urlopen(
+                f"http://{host}:{port}/v1/metrics") as r:
+            snapshot = json.loads(r.read())
+        with urllib.request.urlopen(
+                f"http://{host}:{port}/v1/metrics?format=prometheus") as r:
+            text = r.read().decode()
+    finally:
+        server.shutdown()
+    samples = 0
+    for line in text.splitlines():
+        if not line or line.startswith("#"):
+            continue
+        name, _, value = line.rpartition(" ")
+        assert name and float(value) is not None, f"bad sample line {line!r}"
+        samples += 1
+    assert "serving_requests_total" in snapshot, \
+        "serving counters missing from /v1/metrics"
+    return {"metrics_families": len(snapshot),
+            "prometheus_samples": samples}
 
 CONCURRENCY = (1, 4, 8)
 MODEL = "dblp"
@@ -88,6 +142,11 @@ def _run_level(service: GraphService, concurrency: int,
         raise errors[0]
     after = service.stats()["scheduler"]
     lat_ms = np.asarray(latencies) * 1e3
+    # one traced probe through the full serving path: its per-request trace
+    # gives the level a queue/plan/execute/transfer attribution record
+    probe_id = f"bench-serving-probe-{next(_PROBE_SEQ)}"
+    out = service.extract(MODEL, tenant="probe", timeout=300,
+                          request_id=probe_id)
     return {
         "concurrency": concurrency,
         "requests": len(latencies),
@@ -97,6 +156,7 @@ def _run_level(service: GraphService, concurrency: int,
         "rps": len(latencies) / wall,
         "coalesced": after["coalesced"] - before["coalesced"],
         "executed": after["executed"] - before["executed"],
+        "breakdown": obs.TRACER.breakdown(out["trace_id"]),
     }
 
 
@@ -159,6 +219,11 @@ def run() -> List[Row]:
                 level["p50_ms"] * 1e3,
                 f"{level['rps']:.1f} req/s p99={level['p99_ms']:.1f}ms "
                 f"refresh={level['refresh_s']:.2f}s under load"))
+            # metrics endpoint round-trip over this sf's live registry
+            roundtrip = _metrics_roundtrip(service)
+            for record in trajectory:
+                if record["sf"] == sf and "metrics_families" not in record:
+                    record.update(roundtrip)
         finally:
             service.close()
     with open(JSON_PATH, "w") as f:

@@ -59,10 +59,17 @@ SMOKE_FIELDS = {
                          "speedup_second_cold"),
     "incremental_refresh": ("cold_s", "refresh_s", "speedup"),
     "serving": ("concurrency", "p50_ms", "p99_ms", "rps",
-                "speedup_vs_serial"),
+                "speedup_vs_serial", "metrics_families",
+                "prometheus_samples"),
     "discovery": ("discovery_s", "warm_s", "precision", "recall",
                   "edge_recall", "containment_checks"),
 }
+
+# every artifact record must also carry a tracer breakdown: per-request
+# compile/execute/transfer attribution from repro.obs (the observability
+# contract — artifacts say *where* the time went, not just how much)
+BREAKDOWN_KEYS = ("wall_s", "compile_s", "execute_s", "transfer_s",
+                  "coverage")
 
 
 def _check_artifact(name: str, path: str) -> None:
@@ -79,6 +86,15 @@ def _check_artifact(name: str, path: str) -> None:
             if not isinstance(value, (int, float)) or not math.isfinite(value):
                 raise SystemExit(
                     f"smoke: {path} field {field!r} not finite: {value!r}")
+        breakdown = record.get("breakdown")
+        if not isinstance(breakdown, dict):
+            raise SystemExit(
+                f"smoke: {path} record misses 'breakdown': {record}")
+        for key in BREAKDOWN_KEYS:
+            value = breakdown.get(key)
+            if not isinstance(value, (int, float)) or not math.isfinite(value):
+                raise SystemExit(
+                    f"smoke: {path} breakdown[{key!r}] not finite: {value!r}")
     print(f"# smoke: {path} OK ({len(data)} records)", file=sys.stderr)
 
 

@@ -3,7 +3,9 @@ ExtractionEngine session over TPC-DS, watch the second request hit the
 plan cache and reuse the materialized view built by the first, run graph
 analytics on the extracted graph without leaving the session — then
 mutate the database and watch ``refresh()`` absorb the change through
-delta propagation instead of paying another cold extract.
+delta propagation instead of paying another cold extract, and finally
+pull the request's span tree from the always-on tracer to see where the
+time went.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -148,6 +150,26 @@ def main(sf: int = 2):
     pr_disc = engine.analyze(proposed, algorithm="degree_stats")
     print(f"   degree_stats over the discovered graph: "
           f"{ {k: round(float(np.asarray(v).mean()), 2) for k, v in pr_disc.values.items()} }")
+
+    print("\n== 9. where did the time go? ask the tracer ==")
+    from repro import obs
+    _, bd = obs.traced_call("quickstart.extract", engine.extract, model)
+    print(f"   warm extract: wall {bd['wall_s'] * 1e3:.1f}ms = "
+          f"plan {bd['plan_s'] * 1e3:.1f}ms + "
+          f"compile {bd['compile_s'] * 1e3:.1f}ms + "
+          f"execute {bd['execute_s'] * 1e3:.1f}ms + "
+          f"transfer {bd['transfer_s'] * 1e3:.1f}ms "
+          f"(coverage {bd['coverage']:.0%})")
+    tid = obs.TRACER.trace_ids()[-1]
+    for s in sorted(obs.TRACER.get(tid), key=lambda s: s["start_s"]):
+        if not s["detail"]:
+            print(f"   span {s['name']:<24} {s['dur_s'] * 1e3:8.2f}ms  "
+                  f"[{s['category'] or 'other'}]")
+    hits = obs.REGISTRY.value("engine_cache_events_total",
+                              cache="plans", event="hits")
+    print(f"   plan-cache hits this session: {hits:.0f}  "
+          "(full registry: obs.REGISTRY.snapshot(), or GET /v1/metrics "
+          "on a live server)")
 
 
 if __name__ == "__main__":

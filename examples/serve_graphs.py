@@ -9,6 +9,11 @@ Endpoints (tenant comes from the ``X-Tenant`` header, default "public"):
 
     GET  /healthz                     liveness + served epoch
     GET  /v1/stats                    snapshots/scheduler/tenants/engine
+    GET  /v1/metrics                  metrics registry (JSON; add
+                                      ?format=prometheus for text format)
+    GET  /v1/trace/<id>               one request's span tree + summary
+                                      (?format=chrome for Perfetto /
+                                      chrome://tracing events)
     GET  /v1/models                   registered model names
     POST /v1/extract    {"model": name | spec, "method"?, "epoch"?}
     POST /v1/analyze    {"model": name, "algorithm"?, "params"?, "epoch"?}
@@ -34,6 +39,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro import obs
 from repro.serving import (
     AdmissionError,
     GraphService,
@@ -85,6 +91,15 @@ class GraphRequestHandler(BaseHTTPRequestHandler):
         self.end_headers()
         self.wfile.write(body)
 
+    def _send_text(self, code: int, body: str,
+                   content_type: str = "text/plain; version=0.0.4") -> None:
+        raw = body.encode()
+        self.send_response(code)
+        self.send_header("Content-Type", content_type)
+        self.send_header("Content-Length", str(len(raw)))
+        self.end_headers()
+        self.wfile.write(raw)
+
     def _body(self) -> dict:
         n = int(self.headers.get("Content-Length") or 0)
         if not n:
@@ -95,6 +110,10 @@ class GraphRequestHandler(BaseHTTPRequestHandler):
     def tenant(self) -> str:
         return self.headers.get("X-Tenant") or "public"
 
+    @property
+    def request_id(self) -> Optional[str]:
+        return self.headers.get("X-Request-Id")
+
     def log_message(self, fmt, *args):  # quiet by default
         if getattr(self.server, "verbose", False):
             super().log_message(fmt, *args)
@@ -102,12 +121,31 @@ class GraphRequestHandler(BaseHTTPRequestHandler):
     # -- routes --------------------------------------------------------------
     def do_GET(self) -> None:
         svc = self.server.service
-        if self.path == "/healthz":
+        path, _, query = self.path.partition("?")
+        fmt = dict(p.partition("=")[::2] for p in query.split("&")
+                   if p).get("format", "json")
+        if path == "/healthz":
             self._send(200, {"ok": True,
                              "served_epoch": svc.stats()["served_epoch"]})
-        elif self.path == "/v1/stats":
+        elif path == "/v1/stats":
             self._send(200, svc.stats())
-        elif self.path == "/v1/models":
+        elif path == "/v1/metrics":
+            if fmt == "prometheus":
+                self._send_text(200, obs.REGISTRY.to_prometheus())
+            else:
+                self._send(200, obs.REGISTRY.snapshot())
+        elif path.startswith("/v1/trace/"):
+            tid = path[len("/v1/trace/"):]
+            spans = obs.TRACER.get(tid)
+            if spans is None:
+                self._send(404, {"error": f"no trace {tid!r}",
+                                 "available": obs.TRACER.trace_ids()[-20:]})
+            elif fmt == "chrome":
+                self._send(200, obs.TRACER.chrome(tid))
+            else:
+                self._send(200, {"trace_id": tid, "spans": spans,
+                                 "summary": obs.TRACER.summary(tid)})
+        elif path == "/v1/models":
             self._send(200, {"models": svc.models()})
         else:
             self._send(404, {"error": f"no route {self.path}"})
@@ -123,7 +161,8 @@ class GraphRequestHandler(BaseHTTPRequestHandler):
                 out = svc.extract(req["model"],
                                   method=req.get("method", "extgraph"),
                                   tenant=self.tenant,
-                                  epoch=req.get("epoch"))
+                                  epoch=req.get("epoch"),
+                                  request_id=self.request_id)
                 self._send(200, out)
             elif self.path == "/v1/analyze":
                 out = svc.analyze(req["model"],
@@ -131,6 +170,7 @@ class GraphRequestHandler(BaseHTTPRequestHandler):
                                   method=req.get("method", "extgraph"),
                                   tenant=self.tenant,
                                   epoch=req.get("epoch"),
+                                  request_id=self.request_id,
                                   **(req.get("params") or {}))
                 self._send(200, out)
             elif self.path == "/v1/discover":
@@ -142,7 +182,8 @@ class GraphRequestHandler(BaseHTTPRequestHandler):
                         req.get("accept_threshold", 0.5)),
                     top=req.get("top"),
                     tenant=self.tenant,
-                    epoch=req.get("epoch"))
+                    epoch=req.get("epoch"),
+                    request_id=self.request_id)
                 self._send(200, out)
             elif self.path == "/v1/mutate":
                 insert = req.get("insert")

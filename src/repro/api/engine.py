@@ -42,6 +42,7 @@ import numpy as np
 if TYPE_CHECKING:  # pragma: no cover - annotation-only
     from repro.graph import CSRGraph
 
+from repro import obs
 from repro.core.database import Database, Fingerprint, TableStats
 from repro.core.extract import (
     BASELINE_METHODS,
@@ -186,12 +187,24 @@ class _LRUCache:
     owning engine serializes access under its request lock.
     """
 
-    def __init__(self, capacity: int):
+    def __init__(self, capacity: int, name: Optional[str] = None):
         self.capacity = int(capacity)
+        self.name = name
         self._data: "collections.OrderedDict" = collections.OrderedDict()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+
+    def _event(self, event: str, amount: int = 1) -> None:
+        """Per-instance counters stay exact for :meth:`info` (forked
+        engines keep private books); named caches additionally flow into
+        the process-wide registry."""
+        setattr(self, event, getattr(self, event) + amount)
+        if self.name is not None:
+            obs.REGISTRY.counter(
+                "engine_cache_events_total",
+                help="Engine LRU cache hits/misses/evictions by cache.",
+                cache=self.name, event=event).inc(amount)
 
     def __len__(self) -> int:
         return len(self._data)
@@ -205,10 +218,10 @@ class _LRUCache:
         if key in self._data:
             self._data.move_to_end(key)
             if count:
-                self.hits += 1
+                self._event("hits")
             return self._data[key]
         if count:
-            self.misses += 1
+            self._event("misses")
         return default
 
     def put(self, key, value) -> None:
@@ -216,7 +229,7 @@ class _LRUCache:
         self._data.move_to_end(key)
         while len(self._data) > self.capacity:
             self._data.popitem(last=False)
-            self.evictions += 1
+            self._event("evictions")
 
     def pop(self, key, default=None):
         return self._data.pop(key, default)
@@ -239,7 +252,7 @@ class _LRUCache:
         self._data.update(other._data)
         while len(self._data) > self.capacity:
             self._data.popitem(last=False)
-            self.evictions += 1
+            self._event("evictions")
 
     def info(self) -> Dict[str, int]:
         return {"size": len(self._data), "capacity": self.capacity,
@@ -348,22 +361,29 @@ class ExtractionEngine:
         # reader-vs-reader on one epoch — never reader-vs-writer (the next
         # epoch is built on a fork; see :meth:`fork`)
         self._lock = threading.RLock()
-        self._plans: "_LRUCache" = _LRUCache(max_plans)
-        self._views: "_LRUCache" = _LRUCache(max_views)
+        self._plans: "_LRUCache" = _LRUCache(max_plans, name="plans")
+        self._views: "_LRUCache" = _LRUCache(max_views, name="views")
         # CSR conversions, content-addressed by graph fingerprint
-        self._csrs: "_LRUCache" = _LRUCache(max_csrs)
+        self._csrs: "_LRUCache" = _LRUCache(max_csrs, name="csrs")
         # last materialized result per (model signature, method) — what
         # refresh() propagates deltas into
-        self._results: "_LRUCache" = _LRUCache(max_results)
+        self._results: "_LRUCache" = _LRUCache(max_results, name="results")
         # schema discovery state: per-table column profiles keyed by stats
         # fingerprint (survive unrelated churn), and whole discovery
         # results keyed by (tables, their fingerprints, knobs)
-        self._profiles: "_LRUCache" = _LRUCache(64)
-        self._discoveries: "_LRUCache" = _LRUCache(8)
+        self._profiles: "_LRUCache" = _LRUCache(64, name="profiles")
+        self._discoveries: "_LRUCache" = _LRUCache(8, name="discoveries")
         # request counters (cache_info "requests"): how often each public
         # path actually executed work, which is what serving's coalescing
         # tests read to prove single-flight
         self.request_stats: Dict[str, int] = collections.defaultdict(int)
+
+    def _count_request(self, path: str) -> None:
+        self.request_stats[path] += 1
+        obs.REGISTRY.counter(
+            "engine_requests_total",
+            help="Executed engine requests by public path.",
+            path=path).inc()
 
     # -- cache bookkeeping ---------------------------------------------------
     def clear(self) -> None:
@@ -543,10 +563,11 @@ class ExtractionEngine:
         auto = self.auto_refresh if auto_refresh is None else bool(
             auto_refresh)
         with self._lock:
-            self.request_stats["extracts"] += 1
-            if auto and method in PLANNED_METHODS:
-                return self._refresh_locked(model, method, verbose)
-            return self._extract_full(model, method, verbose)
+            self._count_request("extracts")
+            with obs.span("engine.extract", model=model.name, method=method):
+                if auto and method in PLANNED_METHODS:
+                    return self._refresh_locked(model, method, verbose)
+                return self._extract_full(model, method, verbose)
 
     def _extract_full(self, model: GraphModel, method: str,
                       verbose: bool = False) -> ExtractionResult:
@@ -555,35 +576,40 @@ class ExtractionEngine:
         queries = model.queries()
         timings = Timings()
         epoch0 = self.db.epoch
-        self.request_stats["full_extracts"] += 1
+        self._count_request("full_extracts")
 
         if method in PLANNED_METHODS:
             t0 = time.perf_counter()
-            self._evict_stale_views()
-            rdb = self._request_db()
-            key = self._plan_key(model, method)
-            plan = self._plans.get(key, count=False)
-            if plan is not None and not all(
-                    v.pattern.signature in self._views for v in plan.reused):
-                self._plans.pop(key)
-                plan = None  # a reused view was LRU-evicted: replan
-            hit = plan is not None
-            if hit:
-                self._plans.hits += 1
-            else:
-                self._plans.misses += 1
-                cached = [ViewDef(cv.name, cv.pattern)
-                          for cv in self._views.values()]
-                plan = plan_queries(rdb, queries, method, verbose=verbose,
-                                    cached_views=cached)
-                self._plans.put(key, plan)
+            with obs.span("plan", category="plan") as plan_sp:
+                self._evict_stale_views()
+                rdb = self._request_db()
+                key = self._plan_key(model, method)
+                plan = self._plans.get(key, count=False)
+                if plan is not None and not all(
+                        v.pattern.signature in self._views
+                        for v in plan.reused):
+                    self._plans.pop(key)
+                    plan = None  # a reused view was LRU-evicted: replan
+                hit = plan is not None
+                if hit:
+                    self._plans._event("hits")
+                else:
+                    self._plans._event("misses")
+                    cached = [ViewDef(cv.name, cv.pattern)
+                              for cv in self._views.values()]
+                    plan = plan_queries(rdb, queries, method,
+                                        verbose=verbose, cached_views=cached)
+                    self._plans.put(key, plan)
+                plan_sp.set(cache_hit=hit)
             timings.plan_s = time.perf_counter() - t0
 
             t0 = time.perf_counter()
-            edges, built, reused = run_plan(
-                rdb, plan, compiler=self.compiler if self.compiled else None)
-            for label in edges:
-                jax.block_until_ready(edges[label].valid)
+            with obs.span("execute", category="execute"):
+                edges, built, reused = run_plan(
+                    rdb, plan,
+                    compiler=self.compiler if self.compiled else None)
+                for label in edges:
+                    jax.block_until_ready(edges[label].valid)
             timings.extract_s = time.perf_counter() - t0
             self._harvest_views(rdb, plan, built, reused)
             provenance = PlanProvenance(
@@ -591,13 +617,15 @@ class ExtractionEngine:
                 views_built=tuple(built), views_reused=tuple(reused))
         else:
             plan = None
-            edges, ext_s, conv_s = run_baseline(self.db, queries, method)
+            with obs.span("execute", category="execute", baseline=method):
+                edges, ext_s, conv_s = run_baseline(self.db, queries, method)
             timings.extract_s, timings.convert_s = ext_s, conv_s
             provenance = PlanProvenance(method=method)
 
-        vertices = extract_vertices(self.db, model)
-        graph = ExtractedGraph(vertices=vertices, edges=edges)
-        graph.block_until_ready()
+        with obs.span("vertices", category="execute"):
+            vertices = extract_vertices(self.db, model)
+            graph = ExtractedGraph(vertices=vertices, edges=edges)
+            graph.block_until_ready()
         if method in PLANNED_METHODS:
             self._remember_result(model, method, plan, graph, epoch0)
         return ExtractionResult(graph=graph, timings=timings,
@@ -754,7 +782,32 @@ class ExtractionEngine:
 
     def _refresh_locked(self, model: GraphModel, method: str,
                         verbose: bool) -> ExtractionResult:
-        self.request_stats["refreshes"] += 1
+        self._count_request("refreshes")
+        with obs.span("engine.refresh", model=model.name,
+                      method=method) as sp:
+            res = self._refresh_inner(model, method, verbose)
+        rp = res.refresh
+        if rp is not None:
+            sp.set(path=rp.path, churn=rp.churn,
+                   rows_changed=rp.rows_changed)
+            obs.REGISTRY.counter(
+                "engine_refresh_total",
+                help="refresh() requests by maintenance path taken.",
+                path=rp.path).inc()
+            if rp.path in ("delta", "full"):
+                obs.REGISTRY.histogram(
+                    "engine_refresh_churn",
+                    help="Touched rows / live rows when deltas existed."
+                ).observe(rp.churn)
+            if rp.rows_changed:
+                obs.REGISTRY.counter(
+                    "engine_refresh_rows_changed_total",
+                    help="Changelog rows folded into refreshes."
+                ).inc(rp.rows_changed)
+        return res
+
+    def _refresh_inner(self, model: GraphModel, method: str,
+                       verbose: bool) -> ExtractionResult:
         key = (model_signature(model), method)
         cached = self._results.get(key)
         if cached is None:
@@ -879,16 +932,19 @@ class ExtractionEngine:
         from repro.discovery import discover as run_discovery
         from repro.discovery.profile import SKETCH_K, profile_table
         k = SKETCH_K if sketch_k is None else int(sketch_k)
-        with self._lock:
-            self.request_stats["discovers"] += 1
+        with self._lock, obs.span("engine.discover") as sp:
+            self._count_request("discovers")
             names = tuple(sorted(self.db.tables) if tables is None
                           else sorted(set(tables)))
+            sp.set(tables=len(names))
             dkey = (names, self.db.fingerprint(names), int(sample), k,
                     float(key_threshold), float(accept_threshold),
                     bool(use_name_hints), int(max_joins), int(seed))
             cached = self._discoveries.get(dkey)
             if cached is not None:
+                sp.set(cache_hit=True)
                 return cached
+            sp.set(cache_hit=False)
 
             def profile_fn(name: str):
                 pkey = (name, self._table_fingerprint(name), k)
@@ -899,13 +955,16 @@ class ExtractionEngine:
                     self._profiles.put(pkey, prof)
                 return prof
 
-            result = run_discovery(
-                self.db, names,
-                compiler=self.compiler if self.compiled else None,
-                sample=sample, sketch_k=k, key_threshold=key_threshold,
-                accept_threshold=accept_threshold,
-                use_name_hints=use_name_hints, max_joins=max_joins,
-                seed=seed, profile_fn=profile_fn)
+            with obs.span("profile", category="plan"):
+                profiles = {n: profile_fn(n) for n in names}
+            with obs.span("search", category="execute"):
+                result = run_discovery(
+                    self.db, names,
+                    compiler=self.compiler if self.compiled else None,
+                    sample=sample, sketch_k=k, key_threshold=key_threshold,
+                    accept_threshold=accept_threshold,
+                    use_name_hints=use_name_hints, max_joins=max_joins,
+                    seed=seed, profile_fn=profiles.__getitem__)
             self._discoveries.put(dkey, result)
             return result
 
@@ -957,23 +1016,31 @@ class ExtractionEngine:
                 f"have {sorted(ALGORITHMS)}")
         use_kernel = resolve_use_kernel(use_kernel)
         with self._lock:
-            self.request_stats["analyzes"] += 1
+            self._count_request("analyzes")
 
-        t0 = time.perf_counter()
-        result = self.extract(model, method=method, verbose=verbose,
-                              auto_refresh=auto_refresh)
-        extract_s = time.perf_counter() - t0
+        with obs.span("engine.analyze", model=model.name,
+                      algorithm=algorithm) as sp:
+            t0 = time.perf_counter()
+            result = self.extract(model, method=method, verbose=verbose,
+                                  auto_refresh=auto_refresh)
+            extract_s = time.perf_counter() - t0
 
-        t0 = time.perf_counter()
-        csr, csr_hit, csr_key = self._csr_for(result, use_kernel=use_kernel)
-        result._csr = csr
-        jax.block_until_ready(csr.vertex_ids)
-        csr_build_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            with obs.span("csr", category="csr") as csr_sp:
+                csr, csr_hit, csr_key = self._csr_for(
+                    result, use_kernel=use_kernel)
+                result._csr = csr
+                jax.block_until_ready(csr.vertex_ids)
+                csr_sp.set(cache_hit=csr_hit)
+            csr_build_s = time.perf_counter() - t0
 
-        t0 = time.perf_counter()
-        values = ALGORITHMS[algorithm](csr, use_kernel=use_kernel, **params)
-        jax.block_until_ready(values)
-        analyze_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            with obs.span(f"algorithm:{algorithm}", category="execute"):
+                values = ALGORITHMS[algorithm](csr, use_kernel=use_kernel,
+                                               **params)
+                jax.block_until_ready(values)
+            analyze_s = time.perf_counter() - t0
+            sp.set(csr_cache_hit=csr_hit)
 
         return AnalyticsResult(
             values=values,

@@ -24,6 +24,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 
+from repro import obs
 from repro.core import baselines
 from repro.core.database import Database
 from repro.core.executor import (
@@ -117,23 +118,35 @@ def run_plan(
     built: List[str] = []
     reused: List[str] = [v.name for v in plan.reused]
     for v in plan.views:
-        if ensure_view(db, v.name, v.as_query(), compiler=compiler):
-            built.append(v.name)
-        else:
-            reused.append(v.name)
+        # structural span: emitted for both the eager and the compiled
+        # path, so the two produce identical span-tree shapes
+        with obs.span(f"view:{v.name}", category="execute") as sp:
+            if ensure_view(db, v.name, v.as_query(), compiler=compiler):
+                built.append(v.name)
+                sp.set(built=True)
+            else:
+                reused.append(v.name)
+                sp.set(built=False)
     edges: Dict[str, Table] = {}
     for u in plan.units:
         if u.is_single:
-            if compiler is None:
-                res = execute_query(db, u.single)
-                edges[u.single.name] = edge_output(res, u.single.src,
-                                                   u.single.dst)
-            else:
-                edges[u.single.name] = compiler.run_query_edges(db, u.single)
-        elif compiler is None:
-            edges.update(execute_merged(db, u.group))
+            with obs.span(f"unit:{u.single.name}", category="execute",
+                          unit_kind="single"):
+                if compiler is None:
+                    res = execute_query(db, u.single)
+                    edges[u.single.name] = edge_output(res, u.single.src,
+                                                       u.single.dst)
+                else:
+                    edges[u.single.name] = compiler.run_query_edges(
+                        db, u.single)
         else:
-            edges.update(compiler.run_merged(db, u.group))
+            label = "+".join(u.group.member_names())
+            with obs.span(f"unit:{label}", category="execute",
+                          unit_kind="merged"):
+                if compiler is None:
+                    edges.update(execute_merged(db, u.group))
+                else:
+                    edges.update(compiler.run_merged(db, u.group))
     return edges, built, reused
 
 

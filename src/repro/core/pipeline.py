@@ -45,6 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.cost import estimate_query, scan_estimate, step_expansions
 from repro.core.database import Database
 from repro.core.executor import edge_output, qualified_cond, scan_table
@@ -256,6 +257,7 @@ class UnitProgram:
     capacities: Tuple[int, ...]
     inputs: Tuple[str, ...]               # base-table / view names read
     signature: object                     # hashable cache identity
+    est_rows: Tuple[float, ...] = ()      # cost-model rows per join step
 
 
 # ---------------------------------------------------------------------------
@@ -286,15 +288,15 @@ def build_query_program(
 ) -> UnitProgram:
     """Pre-size a single query's join chain from the cost model."""
     est = estimate_query(db, query)
-    caps = tuple(_bucket(r, margin, clamp)
-                 for r in step_expansions(db, query, est.order))
+    rows = tuple(step_expansions(db, query, est.order))
     return UnitProgram(
         kind="edges" if edges else "query",
         unit=query,
         orders=(est.order,),
-        capacities=caps,
+        capacities=tuple(_bucket(r, margin, clamp) for r in rows),
         inputs=_query_inputs(query),
         signature=("q", query_signature(query), edges),
+        est_rows=rows,
     )
 
 
@@ -345,6 +347,7 @@ def build_merged_program(
         capacities=tuple(_bucket(r, margin, clamp) for r in cap_rows),
         inputs=_merged_inputs(merged),
         signature=("m", merged),
+        est_rows=tuple(cap_rows),
     )
 
 
@@ -585,9 +588,15 @@ class PipelineCompiler:
                       "compiled": 0, "compile_s": 0.0,
                       "tiered": 0, "reoptimized": 0}
 
+    _EVENT_METRIC = "pipeline_executable_events_total"
+
     def _bump(self, key: str, amount=1) -> None:
         with self._lock:
             self.stats[key] += amount
+        obs.REGISTRY.counter(
+            self._EVENT_METRIC,
+            help="Executable-cache and retry events by kind.",
+            event=key).inc(amount)
 
     # -- bookkeeping ---------------------------------------------------------
     def clear(self) -> None:
@@ -671,13 +680,52 @@ class PipelineCompiler:
         if hit:
             self._bump("hits")
             return exe
+        dt = time.perf_counter() - t0
         with self._lock:
             self.stats["misses"] += 1
-            self.stats["compile_s"] += time.perf_counter() - t0
+            self.stats["compile_s"] += dt
             self.stats["compiled"] += 1
             if tiered:
                 self.stats["tiered"] += 1
+        obs.REGISTRY.counter(self._EVENT_METRIC, event="misses").inc()
+        if tiered:
+            obs.REGISTRY.counter(self._EVENT_METRIC, event="tiered").inc()
+        obs.REGISTRY.histogram(
+            "pipeline_compile_seconds",
+            help="Per-unit XLA trace+compile wall time.",
+            kind=prog.kind).observe(dt)
+        obs.TRACER.record(f"pipeline.compile:{prog.kind}", t0, t0 + dt,
+                          category="compile", detail=True,
+                          capacities=list(prog.capacities), tiered=tiered)
         return exe
+
+    @staticmethod
+    def _observe_rows(prog: UnitProgram, caps: Tuple[int, ...],
+                      need: np.ndarray) -> None:
+        """Predicted-vs-actual row accounting (host-known values only).
+
+        ``need`` was already synced by the overflow check, so this adds no
+        device round-trips.  The estimate ratio is (actual+1)/(predicted+1)
+        — log₂ buckets make under- and over-estimates symmetric around 1 —
+        and utilization is actual/capacity (1.0 = a bucket about to
+        overflow).
+        """
+        if need.size == 0:
+            return
+        ratio_h = obs.REGISTRY.histogram(
+            "pipeline_rows_estimate_ratio",
+            help="Actual/predicted rows per join step (1 = perfect "
+                 "cost-model estimate).", kind=prog.kind)
+        util_h = obs.REGISTRY.histogram(
+            "pipeline_capacity_utilization",
+            help="Actual rows / planned capacity per join step.",
+            kind=prog.kind)
+        actual = need.tolist()
+        for i, n in enumerate(actual):
+            if i < len(prog.est_rows):
+                ratio_h.observe((n + 1.0) / (prog.est_rows[i] + 1.0))
+            if i < len(caps) and caps[i] > 0:
+                util_h.observe(n / caps[i])
 
     def _run(self, db: Database, pkey, prog: UnitProgram):
         """Execute with overflow-retry; remembers proven capacities.
@@ -697,10 +745,14 @@ class PipelineCompiler:
         for _ in range(attempts + 1):
             cur = dataclasses.replace(prog, capacities=caps)
             exe = self._executable(cur, inputs)
-            out, totals = exe(inputs)
-            need = np.asarray(totals)                 # the one host sync
+            with obs.span("pipeline.run", category="execute", detail=True,
+                          kind=prog.kind):
+                out, totals = exe(inputs)
+            with obs.span("pipeline.sync", category="transfer", detail=True):
+                need = np.asarray(totals)             # the one host sync
             if need.size == 0 or bool(
                     (need <= np.asarray(caps, dtype=np.int64)).all()):
+                self._observe_rows(prog, caps, need)
                 if caps != prog.capacities:
                     with self._lock:                  # skip retries next time
                         self._programs[pkey] = cur

@@ -28,6 +28,19 @@ from repro.kernels import ref as kref
 _resolve_kernel = kops.resolve_use_kernel
 
 
+def _launched(algorithm: str, use_kernel: bool) -> None:
+    """Count one jitted algorithm-loop launch (host-side — the per-edge
+    kernel invocations inside the loop are not individually observable
+    without device round-trips, which instrumentation must not add)."""
+    from repro import obs
+
+    obs.REGISTRY.counter(
+        "graph_algorithm_runs_total",
+        help="Jitted graph-algorithm loop launches.",
+        algorithm=algorithm,
+        kernel="pallas" if use_kernel else "jnp").inc()
+
+
 def _spmv(src, dst, valid, x, n, use_kernel):
     if use_kernel:
         return kops.edge_spmv(src, dst, valid, x, n)
@@ -78,8 +91,10 @@ def pagerank(csr: CSRGraph, label: Optional[str] = None, iters: int = 20,
              use_kernel: Optional[bool] = None) -> jax.Array:
     """Power-iteration PageRank (dangling mass redistributed uniformly)."""
     src, dst, valid = csr.coo(label)
+    uk = _resolve_kernel(use_kernel)
+    _launched("pagerank", uk)
     return _pagerank_loop(src, dst, valid, csr.num_vertices, int(iters),
-                          float(damp), _resolve_kernel(use_kernel))
+                          float(damp), uk)
 
 
 # -- Weakly connected components --------------------------------------------
@@ -117,8 +132,10 @@ def wcc(csr: CSRGraph, label: Optional[str] = None,
     src, dst, valid = csr.coo(label, symmetric=True)
     if max_iters is None:
         max_iters = max(csr.num_vertices, 1)
+    uk = _resolve_kernel(use_kernel)
+    _launched("wcc", uk)
     labels, _ = _wcc_loop(src, dst, valid, csr.num_vertices, int(max_iters),
-                          _resolve_kernel(use_kernel))
+                          uk)
     return labels
 
 
@@ -157,8 +174,9 @@ def khop(csr: CSRGraph, seeds: Union[jax.Array, Sequence[int]], k: int = 2,
         seed_mask = seeds
     else:
         seed_mask = jnp.zeros((n,), bool).at[seeds.astype(jnp.int32)].set(True)
-    return _khop_loop(src, dst, valid, seed_mask, n, int(k),
-                      _resolve_kernel(use_kernel))
+    uk = _resolve_kernel(use_kernel)
+    _launched("khop", uk)
+    return _khop_loop(src, dst, valid, seed_mask, n, int(k), uk)
 
 
 # -- degree statistics -------------------------------------------------------
@@ -185,8 +203,9 @@ def degree_stats(csr: CSRGraph, label: Optional[str] = None,
                  use_kernel: Optional[bool] = None) -> Dict[str, jax.Array]:
     """Out/in degree arrays + summary scalars over the chosen edges."""
     src, dst, valid = csr.coo(label)
-    return _degree_stats_jit(src, dst, valid, csr.num_vertices,
-                             _resolve_kernel(use_kernel))
+    uk = _resolve_kernel(use_kernel)
+    _launched("degree_stats", uk)
+    return _degree_stats_jit(src, dst, valid, csr.num_vertices, uk)
 
 
 # -- registry (engine.analyze dispatches through this) -----------------------

@@ -23,6 +23,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import threading
+import time
 from typing import Dict, FrozenSet, Optional, Sequence, Tuple
 
 import jax
@@ -333,6 +334,25 @@ def _csr_executable(vtabs, etabs, v_counts, edge_meta, use_kernel):
 
 
 def build_csr(
+    graph: ExtractedGraph,
+    model: GraphModel,
+    use_kernel: bool = False,
+) -> CSRGraph:
+    from repro import obs
+
+    t_start = time.perf_counter()
+    with obs.span("csr.build", category="csr", model=model.name):
+        csr = _build_csr(graph, model, use_kernel)
+    obs.REGISTRY.counter(
+        "csr_builds_total", help="Full CSR conversions (cache misses).",
+    ).inc()
+    obs.REGISTRY.histogram(
+        "csr_build_seconds", help="Wall time of a full CSR conversion.",
+    ).observe(time.perf_counter() - t_start)
+    return csr
+
+
+def _build_csr(
     graph: ExtractedGraph,
     model: GraphModel,
     use_kernel: bool = False,

@@ -187,20 +187,37 @@ class DeltaExecutor:
         table (edge maintenance); ``edges=False`` keeps every column
         (JS-MV view maintenance).
         """
+        from repro import obs
+
         plus: List[Table] = []
         minus: List[Table] = []
-        for term in self.planner.terms(query):
-            tdb = self._term_db(term)
-            if self.compiler is not None:
-                if edges:
-                    out = self.compiler.run_query_edges(tdb, term.query)
+        terms = self.planner.terms(query)
+        for term in terms:
+            sign = "plus" if term.sign > 0 else "minus"
+            # delta-side size is host metadata (pow-2 padded capacity of
+            # the folded changelog rows) — no device sync to report it
+            delta_cap = self._delta_side(term).capacity
+            with obs.span(f"delta:{term.query.name}", category="execute",
+                          detail=True, sign=sign, delta_rows=delta_cap):
+                tdb = self._term_db(term)
+                if self.compiler is not None:
+                    if edges:
+                        out = self.compiler.run_query_edges(tdb, term.query)
+                    else:
+                        out = self.compiler.run_query(tdb, term.query)
                 else:
-                    out = self.compiler.run_query(tdb, term.query)
-            else:
-                out = execute_query(tdb, term.query)
-                if edges:
-                    out = edge_output(out, term.query.src, term.query.dst)
+                    out = execute_query(tdb, term.query)
+                    if edges:
+                        out = edge_output(out, term.query.src,
+                                          term.query.dst)
+            obs.REGISTRY.histogram(
+                "delta_term_rows",
+                help="Delta-side capacity per differentiated term.",
+                sign=sign).observe(delta_cap)
             (plus if term.sign > 0 else minus).append(out)
+        obs.REGISTRY.counter(
+            "delta_terms_total",
+            help="Non-trivial IVM terms executed.").inc(len(terms))
         return plus, minus
 
 

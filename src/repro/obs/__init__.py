@@ -1,0 +1,62 @@
+"""Observability layer: process-wide metrics registry + structured tracer.
+
+Every layer of the repo reports into the same two singletons:
+
+* :data:`REGISTRY` — typed, labeled counters/gauges/histograms,
+  exportable as a JSON snapshot or Prometheus text format
+  (``GET /v1/metrics`` on a live server).
+* :data:`TRACER` — nested spans with trace/span ids and per-category
+  (plan/compile/execute/transfer/csr/queue) time attribution,
+  exportable as JSON or Chrome tracing / Perfetto events
+  (``GET /v1/trace/<id>``).
+
+Usage::
+
+    from repro import obs
+
+    with obs.span("engine.extract", model="dblp"):
+        with obs.span("plan", category="plan"):
+            ...
+    obs.REGISTRY.counter("engine_requests_total", path="extract").inc()
+
+See README "Observability" for the span taxonomy and metric names.
+"""
+from repro.obs.metrics import (  # noqa: F401
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    REGISTRY,
+    get_registry,
+)
+from repro.obs.trace import (  # noqa: F401
+    CATEGORIES,
+    TRACER,
+    Tracer,
+    new_trace_id,
+    sanitize_trace_id,
+    set_enabled,
+    span,
+    span_tree_shape,
+)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "REGISTRY",
+    "get_registry", "CATEGORIES", "TRACER", "Tracer", "new_trace_id",
+    "sanitize_trace_id", "set_enabled", "span", "span_tree_shape",
+    "traced_call",
+]
+
+
+def traced_call(name: str, fn, *args, category: str = "", **attrs):
+    """Run ``fn()`` under a fresh root span; return ``(result, breakdown)``.
+
+    The benchmark helper: the breakdown dict carries wall/plan/compile/
+    execute/transfer/csr/queue/other seconds plus attribution coverage,
+    and lands in ``BENCH_*.json`` records (asserted by the CI bench-smoke
+    job).
+    """
+    with span(name, category=category, **attrs) as s:
+        result = fn(*args)
+        trace_id = s.trace_id
+    return result, TRACER.breakdown(trace_id)

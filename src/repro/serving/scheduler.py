@@ -22,6 +22,15 @@ import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Callable, Dict, Hashable, Tuple
 
+from repro import obs
+
+# Floors for the backoff hint and the EWMA service-time estimate: under
+# clock jitter (or a sub-ms fn) the EWMA can decay toward 0, and a
+# Retry-After of 0 (or less) tells a client to hammer the full queue
+# immediately.  1 ms is the smallest honest "come back later".
+MIN_RETRY_AFTER_S = 0.001
+MIN_EWMA_S = 0.0001
+
 
 class AdmissionError(RuntimeError):
     """Backpressure: the scheduler's pending queue is full.
@@ -65,6 +74,16 @@ class CoalescingScheduler:
         self.executed = 0
         self.rejected = 0
         self.failed = 0
+        self._depth_gauge = obs.REGISTRY.gauge(
+            "serving_queue_depth",
+            help="Requests submitted but not yet finished.", queue=name)
+        self._ewma_gauge = obs.REGISTRY.gauge(
+            "serving_ewma_service_seconds",
+            help="EWMA of recent request service time.", queue=name)
+        self._wait_hist = obs.REGISTRY.histogram(
+            "serving_queue_wait_seconds",
+            help="Submit-to-start wait in the scheduler queue.", queue=name)
+        self._ewma_gauge.set(self._ewma_s)
 
     # -- public API ----------------------------------------------------------
     def submit(self, key: Hashable, fn: Callable[[], object]) -> Future:
@@ -86,14 +105,20 @@ class CoalescingScheduler:
                 raise AdmissionError(self._pending, self.max_queue,
                                      self.retry_after())
             self._pending += 1
-            fut = self._pool.submit(self._run, key, fn)
+            self._depth_gauge.set(self._pending)
+            fut = self._pool.submit(self._run, key, fn,
+                                    time.perf_counter())
             self._inflight[key] = fut
             return fut, False
 
     def retry_after(self) -> float:
-        """Backoff hint: expected drain time of the work ahead of you."""
+        """Backoff hint: expected drain time of the work ahead of you.
+
+        Floored at :data:`MIN_RETRY_AFTER_S` — never zero or negative,
+        whatever the EWMA has decayed to under clock jitter.
+        """
         waves = max(1.0, self._pending / max(1, self.max_workers))
-        return round(self._ewma_s * waves, 3)
+        return max(MIN_RETRY_AFTER_S, round(self._ewma_s * waves, 3))
 
     def stats(self) -> Dict[str, object]:
         with self._lock:
@@ -112,8 +137,10 @@ class CoalescingScheduler:
         self._pool.shutdown(wait=wait)
 
     # -- internals -----------------------------------------------------------
-    def _run(self, key: Hashable, fn: Callable[[], object]) -> object:
+    def _run(self, key: Hashable, fn: Callable[[], object],
+             t_submit: float) -> object:
         t0 = time.perf_counter()
+        self._wait_hist.observe(max(0.0, t0 - t_submit))
         try:
             out = fn()
         except BaseException:
@@ -126,5 +153,8 @@ class CoalescingScheduler:
                 self.executed += 1
                 self._pending -= 1
                 self._inflight.pop(key, None)
-                self._ewma_s += 0.25 * (dt - self._ewma_s)
+                self._ewma_s = max(MIN_EWMA_S,
+                                   self._ewma_s + 0.25 * (dt - self._ewma_s))
+                self._depth_gauge.set(self._pending)
+                self._ewma_gauge.set(self._ewma_s)
         return out

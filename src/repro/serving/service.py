@@ -28,6 +28,7 @@ from typing import Dict, Hashable, Optional, Tuple, Union
 
 import numpy as np
 
+from repro import obs
 from repro.api.builder import model_from_spec
 from repro.api.engine import ExtractionEngine
 from repro.core.database import Database
@@ -36,8 +37,8 @@ from repro.core.pipeline import (
     PipelineCompiler,
     persistent_compilation_cache_dir,
 )
-from repro.serving.quotas import QuotaManager, TenantQuota
-from repro.serving.scheduler import CoalescingScheduler
+from repro.serving.quotas import QuotaExceeded, QuotaManager, TenantQuota
+from repro.serving.scheduler import AdmissionError, CoalescingScheduler
 from repro.serving.snapshots import Snapshot, SnapshotStore
 
 DEFAULT_TENANT = "public"
@@ -181,11 +182,12 @@ class GraphService:
         never blocked and never observe intermediate state.
         """
         t0 = time.perf_counter()
-        with self._build_lock:
+        with self._build_lock, obs.span("serve.refresh") as sp:
             with self._db_lock:
                 new_db = self._db.snapshot()
             with self._store.pin() as cur:
                 if new_db.epoch == cur.epoch:
+                    sp.set(path="noop", epoch=cur.epoch)
                     return {"path": "noop", "epoch": cur.epoch,
                             "build_s": 0.0}
                 new_engine = cur.engine.fork(new_db)
@@ -195,6 +197,7 @@ class GraphService:
                 paths[name] = res.refresh.path if res.refresh else "cold"
             snap = self._store.publish(Snapshot(
                 epoch=new_db.epoch, db=new_db, engine=new_engine))
+            sp.set(path="published", epoch=snap.epoch, models=paths)
             return {"path": "published", "epoch": snap.epoch,
                     "models": paths,
                     "build_s": round(time.perf_counter() - t0, 4)}
@@ -202,7 +205,8 @@ class GraphService:
     # -- read side -----------------------------------------------------------
     def submit_extract(self, model: ModelRef, method: str = "extgraph",
                        tenant: str = DEFAULT_TENANT,
-                       epoch: Optional[int] = None
+                       epoch: Optional[int] = None,
+                       request_id: Optional[str] = None
                        ) -> Tuple[Future, Dict[str, object]]:
         """Schedule an extract; returns ``(future, request_meta)``.
 
@@ -217,26 +221,29 @@ class GraphService:
         def work(snap: Snapshot) -> Dict[str, object]:
             res = snap.engine.extract(m, method=method)
             g = res.graph
-            return {
-                "kind": "extract", "model": name, "method": method,
-                "epoch": snap.epoch,
-                "fingerprint": g.fingerprint(),
-                "vertices": {k: int(np.asarray(t.valid).sum())
-                             for k, t in g.vertices.items()},
-                "edges": {k: int(np.asarray(t.valid).sum())
-                          for k, t in g.edges.items()},
-                "plan_cache_hit": bool(res.provenance.plan_cache_hit),
-                "views_reused": list(res.provenance.views_reused),
-                "timings_s": {"plan": res.timings.plan_s,
-                              "extract": res.timings.extract_s},
-            }
+            with obs.span("payload", category="transfer"):
+                return {
+                    "kind": "extract", "model": name, "method": method,
+                    "epoch": snap.epoch,
+                    "fingerprint": g.fingerprint(),
+                    "vertices": {k: int(np.asarray(t.valid).sum())
+                                 for k, t in g.vertices.items()},
+                    "edges": {k: int(np.asarray(t.valid).sum())
+                              for k, t in g.edges.items()},
+                    "plan_cache_hit": bool(res.provenance.plan_cache_hit),
+                    "views_reused": list(res.provenance.views_reused),
+                    "timings_s": {"plan": res.timings.plan_s,
+                                  "extract": res.timings.extract_s},
+                }
 
-        return self._admit_and_submit(tenant, key, epoch, work)
+        return self._admit_and_submit(tenant, key, epoch, work,
+                                      kind="extract", request_id=request_id)
 
     def submit_analyze(self, model: ModelRef, algorithm: str = "pagerank",
                        method: str = "extgraph",
                        tenant: str = DEFAULT_TENANT,
                        epoch: Optional[int] = None,
+                       request_id: Optional[str] = None,
                        **params) -> Tuple[Future, Dict[str, object]]:
         """Schedule extract+algorithm; returns ``(future, request_meta)``."""
         name, m = self._resolve_model(model)
@@ -246,25 +253,28 @@ class GraphService:
         def work(snap: Snapshot) -> Dict[str, object]:
             res = snap.engine.analyze(m, algorithm=algorithm, method=method,
                                       **params)
-            return {
-                "kind": "analyze", "model": name, "method": method,
-                "algorithm": algorithm, "epoch": snap.epoch,
-                "fingerprint": res.extraction.graph.fingerprint(),
-                "csr_cache_hit": bool(res.provenance.csr_cache_hit),
-                "values": _summarize_values(res.values),
-                "timings_s": {"extract": res.timings.extract_s,
-                              "csr_build": res.timings.csr_build_s,
-                              "analyze": res.timings.analyze_s},
-            }
+            with obs.span("payload", category="transfer"):
+                return {
+                    "kind": "analyze", "model": name, "method": method,
+                    "algorithm": algorithm, "epoch": snap.epoch,
+                    "fingerprint": res.extraction.graph.fingerprint(),
+                    "csr_cache_hit": bool(res.provenance.csr_cache_hit),
+                    "values": _summarize_values(res.values),
+                    "timings_s": {"extract": res.timings.extract_s,
+                                  "csr_build": res.timings.csr_build_s,
+                                  "analyze": res.timings.analyze_s},
+                }
 
-        return self._admit_and_submit(tenant, key, epoch, work)
+        return self._admit_and_submit(tenant, key, epoch, work,
+                                      kind="analyze", request_id=request_id)
 
     def submit_discover(self, tables: Optional[list] = None, *,
                         sample: int = 512, use_name_hints: bool = True,
                         accept_threshold: float = 0.5,
                         top: Optional[int] = None,
                         tenant: str = DEFAULT_TENANT,
-                        epoch: Optional[int] = None
+                        epoch: Optional[int] = None,
+                        request_id: Optional[str] = None
                         ) -> Tuple[Future, Dict[str, object]]:
         """Schedule schema-to-graph discovery; returns ``(future, meta)``.
 
@@ -304,44 +314,69 @@ class GraphService:
                 "timings_s": dict(res.timings),
             }
 
-        return self._admit_and_submit(tenant, key, epoch, work)
+        return self._admit_and_submit(tenant, key, epoch, work,
+                                      kind="discover",
+                                      request_id=request_id)
 
     def extract(self, model: ModelRef, method: str = "extgraph",
                 tenant: str = DEFAULT_TENANT, epoch: Optional[int] = None,
-                timeout: Optional[float] = None) -> Dict[str, object]:
+                timeout: Optional[float] = None,
+                request_id: Optional[str] = None) -> Dict[str, object]:
         """Blocking :meth:`submit_extract`; merges per-request meta in."""
         fut, meta = self.submit_extract(model, method=method, tenant=tenant,
-                                        epoch=epoch)
+                                        epoch=epoch, request_id=request_id)
         return {**fut.result(timeout), **meta}
 
     def analyze(self, model: ModelRef, algorithm: str = "pagerank",
                 method: str = "extgraph", tenant: str = DEFAULT_TENANT,
                 epoch: Optional[int] = None,
                 timeout: Optional[float] = None,
+                request_id: Optional[str] = None,
                 **params) -> Dict[str, object]:
         """Blocking :meth:`submit_analyze`; merges per-request meta in."""
         fut, meta = self.submit_analyze(model, algorithm=algorithm,
                                         method=method, tenant=tenant,
-                                        epoch=epoch, **params)
+                                        epoch=epoch, request_id=request_id,
+                                        **params)
         return {**fut.result(timeout), **meta}
 
     def discover(self, tables: Optional[list] = None, *,
                  sample: int = 512, use_name_hints: bool = True,
                  accept_threshold: float = 0.5, top: Optional[int] = None,
                  tenant: str = DEFAULT_TENANT, epoch: Optional[int] = None,
-                 timeout: Optional[float] = None) -> Dict[str, object]:
+                 timeout: Optional[float] = None,
+                 request_id: Optional[str] = None) -> Dict[str, object]:
         """Blocking :meth:`submit_discover`; merges per-request meta in."""
         fut, meta = self.submit_discover(
             tables, sample=sample, use_name_hints=use_name_hints,
             accept_threshold=accept_threshold, top=top, tenant=tenant,
-            epoch=epoch)
+            epoch=epoch, request_id=request_id)
         return {**fut.result(timeout), **meta}
 
     # -- shared submit plumbing ----------------------------------------------
+    @staticmethod
+    def _count_serve(kind: str, tenant: str, outcome: str) -> None:
+        obs.REGISTRY.counter(
+            "serving_requests_total",
+            help="Served requests by kind, tenant, and outcome.",
+            kind=kind, tenant=tenant, outcome=outcome).inc()
+
     def _admit_and_submit(self, tenant: str, base_key: Hashable,
-                          epoch: Optional[int], work
+                          epoch: Optional[int], work,
+                          kind: str = "request",
+                          request_id: Optional[str] = None
                           ) -> Tuple[Future, Dict[str, object]]:
-        self._quotas.admit(tenant)
+        t_submit = time.perf_counter()
+        trace_id = obs.sanitize_trace_id(request_id) or obs.new_trace_id()
+        try:
+            self._quotas.admit(tenant)
+        except QuotaExceeded:
+            self._count_serve(kind, tenant, "rejected-quota")
+            obs.REGISTRY.counter(
+                "serving_quota_rejections_total",
+                help="Requests rejected at the tenant-quota door.",
+                tenant=tenant, reason="inflight").inc()
+            raise
         try:
             pin_ctx = self._store.pin(epoch)
             snap = pin_ctx.__enter__()
@@ -351,7 +386,8 @@ class GraphService:
         key = (snap.epoch,) + (base_key if isinstance(base_key, tuple)
                                else (base_key,))
         meta: Dict[str, object] = {"tenant": tenant, "coalesced": False,
-                                   "source": "computed"}
+                                   "source": "computed",
+                                   "trace_id": trace_id}
 
         cached = self._quotas.cached(tenant, key)
         if cached is not None:
@@ -360,10 +396,32 @@ class GraphService:
             fut: Future = Future()
             fut.set_result(cached)
             meta["source"] = "tenant-cache"
+            self._count_serve(kind, tenant, "tenant-cache")
+            obs.TRACER.record(f"serve.{kind}", t_submit,
+                              time.perf_counter(), trace_id=trace_id,
+                              parent_id="", tenant=tenant,
+                              source="tenant-cache")
             return fut, meta
 
+        def traced_work() -> object:
+            # runs on a scheduler worker thread: root the request's trace
+            # here, backdated to submit time so queue wait is inside it
+            with obs.span(f"serve.{kind}", trace_id=trace_id,
+                          start_s=t_submit, tenant=tenant,
+                          epoch=snap.epoch) as root:
+                obs.TRACER.record("queue.wait", t_submit,
+                                  time.perf_counter(), category="queue")
+                payload = work(snap)
+                payload["trace_id"] = root.trace_id
+                return payload
+
         try:
-            fut, joined = self._scheduler.submit_ex(key, lambda: work(snap))
+            fut, joined = self._scheduler.submit_ex(key, traced_work)
+        except AdmissionError:
+            pin_ctx.__exit__(None, None, None)
+            self._quotas.release(tenant)
+            self._count_serve(kind, tenant, "rejected-queue")
+            raise
         except BaseException:
             pin_ctx.__exit__(None, None, None)
             self._quotas.release(tenant)
@@ -374,9 +432,18 @@ class GraphService:
             pin_ctx.__exit__(None, None, None)
             meta["coalesced"] = True
             meta["source"] = "coalesced"
+            self._count_serve(kind, tenant, "coalesced")
+            leader_tid = getattr(fut, "_obs_trace_id", "")
+            meta["leader_trace_id"] = leader_tid
 
             def on_joined_done(f: Future) -> None:
                 self._quotas.release(tenant)
+                # the follower's own (one-span) trace, linking the leader's
+                obs.TRACER.record(
+                    "coalesced.follow", t_submit, time.perf_counter(),
+                    category="queue", trace_id=trace_id, parent_id="",
+                    tenant=tenant, kind=kind,
+                    links=getattr(f, "_obs_trace_id", leader_tid))
                 try:
                     payload = f.result()
                 except BaseException:
@@ -386,6 +453,9 @@ class GraphService:
 
             fut.add_done_callback(on_joined_done)
             return fut, meta
+
+        fut._obs_trace_id = trace_id
+        self._count_serve(kind, tenant, "computed")
 
         def on_done(f: Future) -> None:
             pin_ctx.__exit__(None, None, None)
