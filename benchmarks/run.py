@@ -26,6 +26,7 @@ def modules():
         bench_kernels,
         bench_real,
         bench_recommendation,
+        bench_recovery,
         bench_serving,
     )
 
@@ -41,6 +42,7 @@ def modules():
         ("extract_pipeline", bench_extract),
         ("incremental_refresh", bench_incremental),
         ("serving", bench_serving),
+        ("recovery", bench_recovery),
         ("discovery", bench_discovery),
         ("kernels", bench_kernels),
     ]
@@ -50,7 +52,7 @@ def modules():
 # artifact parses and carries its speedup fields — so benchmark scripts
 # can't silently rot (the way the `_VERTS` import break did pre-CI).
 SMOKE_MODULES = ("engine_warm_vs_cold", "graph_analytics", "extract_pipeline",
-                 "incremental_refresh", "serving", "discovery")
+                 "incremental_refresh", "serving", "recovery", "discovery")
 SMOKE_FIELDS = {
     "engine_warm_vs_cold": ("cold_s", "warm_s", "speedup"),
     "graph_analytics": ("cold_s", "warm_s", "speedup"),
@@ -58,6 +60,7 @@ SMOKE_FIELDS = {
                          "second_cold_extract_s", "speedup_cold",
                          "speedup_second_cold"),
     "incremental_refresh": ("cold_s", "refresh_s", "speedup"),
+    "recovery": ("cold_s", "restart_to_warm_s", "speedup"),
     "serving": ("concurrency", "p50_ms", "p99_ms", "rps",
                 "speedup_vs_serial", "metrics_families",
                 "prometheus_samples"),

@@ -23,9 +23,18 @@ Endpoints (tenant comes from the ``X-Tenant`` header, default "public"):
                          "delete_where"?: [col, op, value]}
     POST /v1/refresh    {}            build + publish the next epoch
 
-Backpressure maps to HTTP: a full queue or an over-quota tenant gets
-``429`` with a ``Retry-After`` header instead of unbounded queueing;
-requests pinned to a retired epoch get ``410 Gone``.
+Error hygiene: every non-2xx body is the same JSON shape —
+``{"error": str, "retryable": bool, "trace_id": str, "retry_after"?: s}``
+— so a client can branch on ``retryable`` without parsing prose.  The
+mapping: full queue / over-quota → ``429`` (+ ``Retry-After``), retired
+epoch → ``410``, unknown model → ``404``, bad request → ``400``, blown
+deadline → ``504``, transient internal failure → ``503`` (retryable),
+shutdown / anything else → ``503`` / ``500``.
+
+Durability: ``--durable-dir DIR`` WALs every mutation and checkpoints on
+publish, so a SIGKILL'd server restarted on the same DIR recovers to
+bit-identical graphs (see ``--fault-plan`` and
+``examples/crash_restart_smoke.py`` for the harness that proves it).
 
     PYTHONPATH=src python examples/serve_graphs.py --port 8080 --dataset dblp
     curl -s -X POST localhost:8080/v1/extract -d '{"model": "dblp"}'
@@ -40,10 +49,13 @@ from typing import Optional
 import numpy as np
 
 from repro import obs
+from repro.durability import FaultPlan, RetryableError, faults
 from repro.serving import (
     AdmissionError,
+    DeadlineExceeded,
     GraphService,
     QuotaExceeded,
+    ServiceClosed,
     SnapshotNotFound,
     UnknownModel,
 )
@@ -100,6 +112,15 @@ class GraphRequestHandler(BaseHTTPRequestHandler):
         self.end_headers()
         self.wfile.write(raw)
 
+    def _send_error(self, code: int, error: str, retryable: bool,
+                    retry_after: Optional[float] = None, **extra) -> None:
+        """The one non-2xx body shape: error + retryable + trace_id."""
+        body = {"error": error, "retryable": bool(retryable),
+                "trace_id": self.trace_id, **extra}
+        if retry_after is not None:
+            body["retry_after"] = max(float(retry_after), 0.001)
+        self._send(code, body, retry_after=retry_after)
+
     def _body(self) -> dict:
         n = int(self.headers.get("Content-Length") or 0)
         if not n:
@@ -111,8 +132,15 @@ class GraphRequestHandler(BaseHTTPRequestHandler):
         return self.headers.get("X-Tenant") or "public"
 
     @property
-    def request_id(self) -> Optional[str]:
-        return self.headers.get("X-Request-Id")
+    def trace_id(self) -> str:
+        # one id per request: the client's X-Request-Id if sane, else
+        # minted here — identical in the response body and the trace store
+        tid = getattr(self, "_trace_id", None)
+        if tid is None:
+            tid = (obs.sanitize_trace_id(self.headers.get("X-Request-Id"))
+                   or obs.new_trace_id())
+            self._trace_id = tid
+        return tid
 
     def log_message(self, fmt, *args):  # quiet by default
         if getattr(self.server, "verbose", False):
@@ -125,8 +153,9 @@ class GraphRequestHandler(BaseHTTPRequestHandler):
         fmt = dict(p.partition("=")[::2] for p in query.split("&")
                    if p).get("format", "json")
         if path == "/healthz":
-            self._send(200, {"ok": True,
-                             "served_epoch": svc.stats()["served_epoch"]})
+            # 200 with a status field even when degraded: the process is
+            # alive and serving epoch E; "degraded" carries the cause
+            self._send(200, svc.healthz())
         elif path == "/v1/stats":
             self._send(200, svc.stats())
         elif path == "/v1/metrics":
@@ -138,8 +167,8 @@ class GraphRequestHandler(BaseHTTPRequestHandler):
             tid = path[len("/v1/trace/"):]
             spans = obs.TRACER.get(tid)
             if spans is None:
-                self._send(404, {"error": f"no trace {tid!r}",
-                                 "available": obs.TRACER.trace_ids()[-20:]})
+                self._send_error(404, f"no trace {tid!r}", False,
+                                 available=obs.TRACER.trace_ids()[-20:])
             elif fmt == "chrome":
                 self._send(200, obs.TRACER.chrome(tid))
             else:
@@ -148,21 +177,25 @@ class GraphRequestHandler(BaseHTTPRequestHandler):
         elif path == "/v1/models":
             self._send(200, {"models": svc.models()})
         else:
-            self._send(404, {"error": f"no route {self.path}"})
+            self._send_error(404, f"no route {self.path}", False)
 
     def do_POST(self) -> None:
         svc = self.server.service
         try:
             req = self._body()
         except (ValueError, json.JSONDecodeError) as e:
-            return self._send(400, {"error": f"bad JSON: {e}"})
+            return self._send_error(400, f"bad JSON: {e}", False)
+        deadline_s = req.get("deadline_s")
+        if deadline_s is not None:
+            deadline_s = float(deadline_s)
         try:
             if self.path == "/v1/extract":
                 out = svc.extract(req["model"],
                                   method=req.get("method", "extgraph"),
                                   tenant=self.tenant,
                                   epoch=req.get("epoch"),
-                                  request_id=self.request_id)
+                                  request_id=self.trace_id,
+                                  deadline_s=deadline_s)
                 self._send(200, out)
             elif self.path == "/v1/analyze":
                 out = svc.analyze(req["model"],
@@ -170,7 +203,8 @@ class GraphRequestHandler(BaseHTTPRequestHandler):
                                   method=req.get("method", "extgraph"),
                                   tenant=self.tenant,
                                   epoch=req.get("epoch"),
-                                  request_id=self.request_id,
+                                  request_id=self.trace_id,
+                                  deadline_s=deadline_s,
                                   **(req.get("params") or {}))
                 self._send(200, out)
             elif self.path == "/v1/discover":
@@ -183,7 +217,8 @@ class GraphRequestHandler(BaseHTTPRequestHandler):
                     top=req.get("top"),
                     tenant=self.tenant,
                     epoch=req.get("epoch"),
-                    request_id=self.request_id)
+                    request_id=self.trace_id,
+                    deadline_s=deadline_s)
                 self._send(200, out)
             elif self.path == "/v1/mutate":
                 insert = req.get("insert")
@@ -194,24 +229,47 @@ class GraphRequestHandler(BaseHTTPRequestHandler):
                                  delete_where=tuple(dw) if dw else None)
                 self._send(200, out)
             elif self.path == "/v1/refresh":
-                self._send(200, svc.refresh())
+                out = svc.refresh()
+                if out.get("path") in ("failed", "backoff"):
+                    # the previous epoch is still served; the build failed
+                    # (or is in its backoff window) — tell the client when
+                    # to come back
+                    self._send_error(
+                        503, out.get("error") or out.get("cause")
+                        or "refresh backing off", True,
+                        retry_after=out.get("retry_in_s"), **{
+                            "path": out["path"], "epoch": out.get("epoch")})
+                else:
+                    self._send(200, out)
             else:
-                self._send(404, {"error": f"no route {self.path}"})
+                self._send_error(404, f"no route {self.path}", False)
         except KeyError as e:
             if isinstance(e, UnknownModel):
-                self._send(404, {"error": str(e)})
+                self._send_error(404, str(e), False, available=e.available)
             elif isinstance(e, SnapshotNotFound):
-                self._send(410, {"error": str(e),
-                                 "available": e.available})
+                self._send_error(410, str(e), False, available=e.available)
             else:
-                self._send(400, {"error": f"missing field {e}"})
+                self._send_error(400, f"missing field {e}", False)
         except QuotaExceeded as e:
-            self._send(429, {"error": str(e), "tenant": e.tenant},
-                       retry_after=e.retry_after)
+            self._send_error(429, str(e), True, retry_after=e.retry_after,
+                             tenant=e.tenant)
         except AdmissionError as e:
-            self._send(429, {"error": str(e)}, retry_after=e.retry_after)
+            self._send_error(429, str(e), True, retry_after=e.retry_after)
+        except DeadlineExceeded as e:
+            self._send_error(504, str(e), True, retry_after=e.retry_after,
+                             stage=e.stage)
+        except ServiceClosed as e:
+            self._send_error(503, str(e), False)
+        except RetryableError as e:
+            # a transient internal fault that survived the service's own
+            # bounded retries — honest 503, client may try again
+            self._send_error(503, str(e), True,
+                             retry_after=getattr(e, "retry_after", None))
         except ValueError as e:
-            self._send(400, {"error": str(e)})
+            self._send_error(400, str(e), False)
+        except Exception as e:
+            self._send_error(500, f"internal error: "
+                             f"{type(e).__name__}: {e}", False)
 
 
 def make_server(service: GraphService, host: str = "127.0.0.1",
@@ -236,11 +294,29 @@ def main(argv=None) -> None:
                         help="scheduler worker threads")
     parser.add_argument("--warm", action="store_true",
                         help="extract every model once before serving")
+    parser.add_argument("--durable-dir", default=None,
+                        help="WAL + checkpoint directory; restarting on "
+                             "the same dir recovers the served state")
+    parser.add_argument("--fault-plan", default=None,
+                        help="fault-injection plan: inline JSON or "
+                             "@path/to/plan.json (testing only)")
     parser.add_argument("--verbose", action="store_true")
     args = parser.parse_args(argv)
 
+    if args.fault_plan:
+        spec = args.fault_plan
+        if spec.startswith("@"):
+            with open(spec[1:]) as f:
+                spec = f.read()
+        plan = FaultPlan.from_json(spec)
+        faults.install(plan)
+        print(f"fault plan installed: {[r.spec() for r in plan.rules]}")
+
     service = build_service(args.dataset, scale=args.scale,
-                            max_workers=args.workers)
+                            max_workers=args.workers,
+                            durable_dir=args.durable_dir)
+    if service.recovery is not None:
+        print(f"recovered: {service.recovery.summary()}")
     if args.warm:
         for name in service.models():
             r = service.extract(name)
@@ -249,7 +325,7 @@ def main(argv=None) -> None:
                          verbose=args.verbose)
     host, port = server.server_address[:2]
     print(f"serving {args.dataset} on http://{host}:{port} "
-          f"(models: {', '.join(service.models())})")
+          f"(models: {', '.join(service.models())})", flush=True)
     try:
         server.serve_forever()
     except KeyboardInterrupt:

@@ -44,6 +44,7 @@ if TYPE_CHECKING:  # pragma: no cover - annotation-only
 
 from repro import obs
 from repro.core.database import Database, Fingerprint, TableStats
+from repro.durability import faults
 from repro.core.extract import (
     BASELINE_METHODS,
     ExtractedGraph,
@@ -548,6 +549,31 @@ class ExtractionEngine:
             epoch=epoch, base_tables=tables, base_stats=stats,
             plan_key=self._plan_key(model, method)))
 
+    def adopt_extraction(self, model: GraphModel, graph: ExtractedGraph,
+                         method: str = "extgraph",
+                         epoch: Optional[int] = None) -> None:
+        """Seed the result cache with an externally produced extraction.
+
+        The recovery path restores checkpointed graphs straight into the
+        engine: ``graph`` is adopted as ``model``'s maintained result at
+        ``epoch`` (default: the database's current epoch), with the
+        current query-relation tables as the delta baseline.  Later
+        ``refresh()``/auto-refresh calls maintain it incrementally exactly
+        as if this engine had extracted it — no plan is attached, so a
+        churn-forced full re-extract replans from scratch.
+        """
+        if method not in PLANNED_METHODS:
+            raise ValueError(
+                f"adopt_extraction() supports planned methods only, "
+                f"not {method!r}")
+        with self._lock:
+            tables, stats = self._query_base_state(model)
+            key = (model_signature(model), method)
+            self._results.put(key, _CachedExtraction(
+                model=model, method=method, plan=None, graph=graph,
+                epoch=self.db.epoch if epoch is None else int(epoch),
+                base_tables=tables, base_stats=stats))
+
     def extract(self, model: GraphModel, method: str = "extgraph",
                 verbose: bool = False,
                 auto_refresh: Optional[bool] = None) -> ExtractionResult:
@@ -599,6 +625,9 @@ class ExtractionEngine:
                               for cv in self._views.values()]
                     plan = plan_queries(rdb, queries, method,
                                         verbose=verbose, cached_views=cached)
+                    # fault site before the fill: an injected failure loses
+                    # only the cache entry, and a retry rebuilds it
+                    faults.fire("engine.cache_fill")
                     self._plans.put(key, plan)
                 plan_sp.set(cache_hit=hit)
             timings.plan_s = time.perf_counter() - t0
@@ -988,6 +1017,7 @@ class ExtractionEngine:
             if not hit:
                 csr = build_csr(result.graph, result.model,
                                 use_kernel=bool(use_kernel))
+                faults.fire("engine.cache_fill")
                 self._csrs.put(fp, csr)
             return csr, hit, fp
 

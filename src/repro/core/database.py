@@ -122,24 +122,65 @@ class Database:
     older cursor fall back to full recomputation.
     """
 
-    def __init__(self, tables: Optional[Dict[str, Table]] = None):
+    def __init__(self, tables: Optional[Dict[str, Table]] = None, *,
+                 durable_dir: Optional[str] = None):
         self.tables: Dict[str, Table] = dict(tables or {})
         self.stats: Dict[str, TableStats] = {}
         self.epoch: int = 0
         self.changelog: Dict[str, "ChangeLog"] = {}
+        self._wal = None
         for name in self.tables:
             self.analyze(name)
+        if durable_dir is not None:
+            self.attach_wal(durable_dir)
+
+    # -- durability ----------------------------------------------------------
+    @property
+    def wal(self):
+        """The attached write-ahead log, or ``None`` (in-memory only)."""
+        return self._wal
+
+    def attach_wal(self, wal_or_dir) -> "object":
+        """Make this database durable: every mutation is WAL'd first.
+
+        Accepts a directory path or a ready
+        :class:`~repro.durability.wal.WriteAheadLog`.  The WAL append is
+        the commit point — if it raises, the in-memory tables, stats,
+        changelog, and epoch are all left untouched, so a failed durable
+        write can simply be retried.
+        """
+        from repro.durability.wal import WriteAheadLog
+
+        if isinstance(wal_or_dir, WriteAheadLog):
+            self._wal = wal_or_dir
+        else:
+            self._wal = WriteAheadLog(str(wal_or_dir))
+        return self._wal
+
+    def detach_wal(self) -> None:
+        if self._wal is not None:
+            self._wal.close()
+            self._wal = None
 
     def add_table(self, name: str, table: Table, analyze: bool = True):
         replacing = name in self.tables
+        if self._wal is not None:
+            # wholesale replacement must be durable too: log the full new
+            # table *before* binding it.  A durable database stamps every
+            # add with an epoch (even a fresh name, which in-memory-only
+            # databases do not count) so WAL records stay strictly ordered.
+            self._wal.append_replace(
+                name, self.epoch + 1, table.to_numpy(),
+                capacity=table.capacity, replacing=replacing)
         self.tables[name] = table
+        if replacing or self._wal is not None:
+            self.epoch += 1
         if replacing:
             # wholesale replacement is not change capture: it invalidates
             # the delta history, so cursors from before it stop being
             # serviceable and refresh consumers take the full path
             from repro.incremental.changelog import ChangeLog
 
-            self.epoch += 1
             self.changelog.setdefault(name, ChangeLog()).prune(self.epoch)
         if analyze:
             self.analyze(name)
@@ -177,9 +218,13 @@ class Database:
              plus_count: int, minus_count: int) -> "TableDelta":
         from repro.incremental.changelog import ChangeLog, TableDelta
 
-        self.epoch += 1
-        entry = TableDelta(epoch=self.epoch, plus=plus, minus=minus,
+        entry = TableDelta(epoch=self.epoch + 1, plus=plus, minus=minus,
                            plus_count=plus_count, minus_count=minus_count)
+        if self._wal is not None:
+            # the durability point: if the append raises, no in-memory
+            # state has moved — the caller may retry the whole mutation
+            self._wal.append_delta(name, entry)
+        self.epoch += 1
         self.changelog.setdefault(name, ChangeLog()).append(entry)
         return entry
 
@@ -267,9 +312,12 @@ class Database:
                              "nor rows to delete")
         if plus_table is None and minus_table is None:
             return self._log(name, None, None, 0, 0)  # empty delta: epoch only
+        # _log first: it holds the WAL commit point, and the table/stats
+        # swap below must not happen if durability was refused
+        entry = self._log(name, plus_table, minus_table, n_plus, n_minus)
         self.tables[name] = cur
         self.stats[name] = st
-        return self._log(name, plus_table, minus_table, n_plus, n_minus)
+        return entry
 
     def insert_rows(self, name: str, **columns) -> "TableDelta":
         """Append rows (one array per column) to ``name``; change-captured."""
@@ -316,7 +364,8 @@ class Database:
         leak back into this database, and mutations applied to either side
         after the split never reach the other — tables, stats objects, and
         changelog entry lists are all private (the underlying immutable
-        arrays and delta entries are shared).
+        arrays and delta entries are shared).  The clone never inherits the
+        WAL: only the live database writes durable history.
         """
         clone = Database()
         clone.tables = dict(self.tables)

@@ -127,6 +127,16 @@ def enable_persistent_compilation_cache(
                 jax.config.update(flag, value)
             except AttributeError:  # older jax: keep its default thresholds
                 pass
+        # jax initializes its cache object lazily on the first compile; a
+        # compile that happened before this call (data generation, another
+        # engine) pins it to the then-current dir — possibly *disabled* —
+        # and the config update alone never re-initializes it.  Force a
+        # re-init so enabling (or re-pointing) after warm-up still works.
+        try:
+            from jax._src import compilation_cache as _jax_cc
+            _jax_cc.reset_cache()
+        except Exception:       # pragma: no cover - older jax layouts
+            pass
         _PERSISTENT_CACHE_DIR = path
     return path
 

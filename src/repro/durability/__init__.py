@@ -1,0 +1,52 @@
+# Durability + recovery + fault injection for the serving stack: a
+# crash-safe WAL under the live database's change capture, manifest +
+# checkpoint warm restarts verified by bag-digest parity, and a
+# deterministic fault-injection harness so every failure path is
+# exercisable in tier-1.
+from repro.durability import faults  # noqa: F401
+from repro.durability.faults import (
+    FatalFaultInjected,
+    FaultInjected,
+    FaultPlan,
+    FaultRule,
+    INJECTOR,
+    RetryableError,
+)
+from repro.durability.recovery import (
+    RecoveryError,
+    RecoveryReport,
+    load_manifest,
+    recover_database,
+    replay_wal,
+    restore_database,
+    write_manifest,
+)
+from repro.durability.wal import (
+    WALCorruption,
+    WALError,
+    WALRecord,
+    WriteAheadLog,
+    read_all,
+)
+
+__all__ = [
+    "faults",
+    "FaultPlan",
+    "FaultRule",
+    "FaultInjected",
+    "FatalFaultInjected",
+    "RetryableError",
+    "INJECTOR",
+    "WriteAheadLog",
+    "WALRecord",
+    "WALError",
+    "WALCorruption",
+    "read_all",
+    "RecoveryError",
+    "RecoveryReport",
+    "write_manifest",
+    "load_manifest",
+    "restore_database",
+    "replay_wal",
+    "recover_database",
+]

@@ -19,7 +19,7 @@ merge correctly without per-entry replay.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -133,3 +133,46 @@ def merge_deltas(entries: Sequence[TableDelta]) -> MergedDelta:
         [e.minus for e in entries if e.minus is not None])
     return MergedDelta(plus=plus, minus=minus,
                        plus_count=n_plus, minus_count=n_minus)
+
+
+# -- WAL serialization --------------------------------------------------------
+# A TableDelta round-trips through a flat {"plus/<col>": array,
+# "minus/<col>": array} mapping — exactly the shape ``np.savez`` wants, so
+# the write-ahead log can persist deltas without a pickle anywhere.
+
+def delta_to_payload(entry: TableDelta) -> Dict[str, np.ndarray]:
+    """Flatten a delta's signed row sets into npz-ready keyed arrays."""
+    out: Dict[str, np.ndarray] = {}
+    if entry.plus is not None:
+        for col, arr in entry.plus.to_numpy().items():
+            out[f"plus/{col}"] = arr
+    if entry.minus is not None:
+        for col, arr in entry.minus.to_numpy().items():
+            out[f"minus/{col}"] = arr
+    return out
+
+
+def payload_to_rows(payload: Mapping[str, np.ndarray], side: str
+                    ) -> Optional[Dict[str, np.ndarray]]:
+    """One signed side (``"plus"``/``"minus"``) of a flattened payload."""
+    prefix = side + "/"
+    cols = {k[len(prefix):]: np.asarray(v) for k, v in payload.items()
+            if k.startswith(prefix)}
+    return cols or None
+
+
+def delta_from_payload(epoch: int, payload: Mapping[str, np.ndarray]
+                       ) -> TableDelta:
+    """Inverse of :func:`delta_to_payload` (bag-identical, all-valid rows)."""
+    sides: Dict[str, Optional[Table]] = {}
+    counts: Dict[str, int] = {}
+    for side in ("plus", "minus"):
+        cols = payload_to_rows(payload, side)
+        if cols is None:
+            sides[side], counts[side] = None, 0
+            continue
+        n = len(next(iter(cols.values())))
+        sides[side] = Table.from_arrays(**cols) if n else None
+        counts[side] = n if sides[side] is not None else 0
+    return TableDelta(epoch=epoch, plus=sides["plus"], minus=sides["minus"],
+                      plus_count=counts["plus"], minus_count=counts["minus"])

@@ -23,10 +23,12 @@ See README "Observability" for the span taxonomy and metric names.
 """
 from repro.obs.metrics import (  # noqa: F401
     Counter,
+    FAILURE_FAMILIES,
     Gauge,
     Histogram,
     MetricsRegistry,
     REGISTRY,
+    failure_counter,
     get_registry,
 )
 from repro.obs.trace import (  # noqa: F401
@@ -42,9 +44,9 @@ from repro.obs.trace import (  # noqa: F401
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "REGISTRY",
-    "get_registry", "CATEGORIES", "TRACER", "Tracer", "new_trace_id",
-    "sanitize_trace_id", "set_enabled", "span", "span_tree_shape",
-    "traced_call",
+    "FAILURE_FAMILIES", "failure_counter", "get_registry", "CATEGORIES",
+    "TRACER", "Tracer", "new_trace_id", "sanitize_trace_id", "set_enabled",
+    "span", "span_tree_shape", "traced_call",
 ]
 
 

@@ -332,3 +332,41 @@ REGISTRY = MetricsRegistry()
 
 def get_registry() -> MetricsRegistry:
     return REGISTRY
+
+
+# -- failure / recovery metric families ---------------------------------------
+# The robustness layer's counters, named in one place so every emitter
+# (scheduler, service, WAL, recovery, fault injector) uses the same family
+# name and help string, and dashboards can enumerate the full set.
+FAILURE_FAMILIES: Dict[str, str] = {
+    "serving_deadline_exceeded_total":
+        "Requests failed by their per-request deadline.",
+    "serving_retries_total":
+        "Bounded retries of retryable failures, by operation.",
+    "serving_refresh_failures_total":
+        "Failed epoch builds (discarded; previous epoch kept serving).",
+    "serving_persist_failures_total":
+        "Durability persists that failed after a successful publish.",
+    "serving_closed_rejections_total":
+        "Requests rejected because the service is closing.",
+    "durability_wal_records_total":
+        "Records appended to the write-ahead log.",
+    "durability_wal_truncated_records_total":
+        "Torn-tail bytes-discarding truncations during WAL replay.",
+    "durability_recoveries_total":
+        "Warm restarts recovered from a durable_dir, by path.",
+    "durability_faults_injected_total":
+        "Faults fired by the injection harness, by site and action.",
+}
+
+
+def failure_counter(name: str, **labels) -> Counter:
+    """A counter from the registered failure-family catalogue.
+
+    Guards against typo'd family names drifting out of the catalogue —
+    new failure counters must be declared in :data:`FAILURE_FAMILIES`.
+    """
+    if name not in FAILURE_FAMILIES:
+        raise KeyError(f"{name!r} is not a declared failure family "
+                       f"(have {sorted(FAILURE_FAMILIES)})")
+    return REGISTRY.counter(name, help=FAILURE_FAMILIES[name], **labels)

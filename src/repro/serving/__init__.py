@@ -4,7 +4,12 @@
 # building the next epoch), and per-tenant admission quotas + response
 # caches.  The HTTP front end lives in examples/serve_graphs.py.
 from repro.serving.quotas import QuotaExceeded, QuotaManager, TenantQuota
-from repro.serving.scheduler import AdmissionError, CoalescingScheduler
+from repro.serving.scheduler import (
+    AdmissionError,
+    CoalescingScheduler,
+    DeadlineExceeded,
+    ServiceClosed,
+)
 from repro.serving.service import (
     DEFAULT_TENANT,
     GraphService,
@@ -18,6 +23,8 @@ __all__ = [
     "UnknownModel",
     "CoalescingScheduler",
     "AdmissionError",
+    "DeadlineExceeded",
+    "ServiceClosed",
     "QuotaManager",
     "TenantQuota",
     "QuotaExceeded",

@@ -21,15 +21,16 @@ from __future__ import annotations
 
 import hashlib
 import json
+import logging
 import threading
 import time
 from concurrent.futures import Future
-from typing import Dict, Hashable, Optional, Tuple, Union
+from typing import Callable, Dict, Hashable, Optional, Tuple, Union
 
 import numpy as np
 
 from repro import obs
-from repro.api.builder import model_from_spec
+from repro.api.builder import model_from_spec, model_to_spec
 from repro.api.engine import ExtractionEngine
 from repro.core.database import Database
 from repro.core.model import GraphModel, model_signature
@@ -37,9 +38,19 @@ from repro.core.pipeline import (
     PipelineCompiler,
     persistent_compilation_cache_dir,
 )
+from repro.durability import faults, recovery as _recovery
+from repro.durability.faults import RetryableError
+from repro.durability.recovery import RecoveryError, RecoveryReport
 from repro.serving.quotas import QuotaExceeded, QuotaManager, TenantQuota
-from repro.serving.scheduler import AdmissionError, CoalescingScheduler
+from repro.serving.scheduler import (
+    AdmissionError,
+    CoalescingScheduler,
+    DeadlineExceeded,
+    ServiceClosed,
+)
 from repro.serving.snapshots import Snapshot, SnapshotStore
+
+log = logging.getLogger("repro.serving")
 
 DEFAULT_TENANT = "public"
 
@@ -96,19 +107,33 @@ class GraphService:
                  keep_snapshots: int = 2,
                  refresh_threshold: float = 0.1,
                  persistent_cache: Optional[str] = None,
-                 engine_opts: Optional[Dict[str, int]] = None):
-        self._db = db
+                 engine_opts: Optional[Dict[str, int]] = None,
+                 durable_dir: Optional[str] = None,
+                 retry_attempts: int = 3):
         self._db_lock = threading.RLock()     # guards live-db mutations
         self._build_lock = threading.Lock()   # one epoch builder at a time
         self._models: Dict[str, GraphModel] = dict(models or {})
         opts = dict(engine_opts or {})
-        base_db = db.snapshot()
-        base_engine = ExtractionEngine(
-            base_db, compiler=compiler, compiled=compiled,
-            auto_refresh=False, refresh_threshold=refresh_threshold,
-            persistent_cache=persistent_cache, **opts)
-        self.compiler = base_engine.compiler
         self._engine_opts = opts
+        self._durable_dir = durable_dir
+        self._retry_attempts = max(1, int(retry_attempts))
+        self._degraded: Optional[Dict[str, object]] = None
+        self._refresh_failures = 0
+        self._refresh_retry_at = 0.0
+        self.recovery: Optional[RecoveryReport] = None
+        if durable_dir is not None:
+            db, base_db, base_engine = self._recover(
+                db, durable_dir, compiler=compiler, compiled=compiled,
+                refresh_threshold=refresh_threshold,
+                persistent_cache=persistent_cache)
+        else:
+            base_db = db.snapshot()
+            base_engine = ExtractionEngine(
+                base_db, compiler=compiler, compiled=compiled,
+                auto_refresh=False, refresh_threshold=refresh_threshold,
+                persistent_cache=persistent_cache, **opts)
+        self._db = db
+        self.compiler = base_engine.compiler
         self._store = SnapshotStore(
             Snapshot(epoch=base_db.epoch, db=base_db, engine=base_engine),
             keep=keep_snapshots)
@@ -117,6 +142,88 @@ class GraphService:
         self._quotas = QuotaManager(default=default_quota,
                                     per_tenant=tenant_quotas)
         self.started_at = time.time()
+
+    def _recover(self, base: Database, durable_dir: str, *,
+                 compiler, compiled, refresh_threshold, persistent_cache):
+        """Warm-restart path: manifest restore → verify → replay → re-arm.
+
+        1. Restore the checkpointed database at the last published epoch P
+           (or fall back to the caller's base when nothing was published).
+        2. Verify by bag-digest parity: every model recorded in the
+           manifest must reproduce its recorded graph fingerprint —
+           recomputed over the checkpointed graph tables when present
+           (which are then adopted straight into the engine's result
+           cache, so the first response needs no extract at all), via a
+           fresh extract over the restored tables otherwise.
+           :class:`RecoveryError` on any mismatch.
+        3. Replay the WAL tail (epochs > P) through the ordinary mutation
+           API, repopulating the changelog; only then attach the WAL for
+           appending.
+        4. Resume serving at P — exactly the epoch the dead process was
+           serving.  The replayed tail (P, L] is live-but-unpublished,
+           just as it was pre-crash; the next :meth:`refresh` publishes
+           it through the ordinary incremental path, cache-warm because
+           verification already primed the engine's results at P.
+        """
+        manifest = _recovery.load_manifest(durable_dir)
+        verified: Dict[str, str] = {}
+        if manifest is None:
+            log.warning(
+                "durable_dir %s has no manifest: cold extract over the "
+                "base database + full WAL replay", durable_dir)
+            db = base
+            path, manifest_epoch = "cold", None
+            replayed, skipped, truncated = _recovery.replay_wal(
+                db, durable_dir)
+            snap_db = db.snapshot()
+            engine = ExtractionEngine(
+                snap_db, compiler=compiler, compiled=compiled,
+                auto_refresh=False, refresh_threshold=refresh_threshold,
+                persistent_cache=persistent_cache, **self._engine_opts)
+        else:
+            db = _recovery.restore_database(durable_dir, manifest)
+            path, manifest_epoch = "checkpoint", int(manifest["epoch"])
+            for name, spec in dict(manifest.get("models") or {}).items():
+                if name not in self._models:
+                    self._models[name] = model_from_spec(spec)
+            db_at_p = db.snapshot()
+            engine = ExtractionEngine(
+                db_at_p, compiler=compiler, compiled=compiled,
+                auto_refresh=False, refresh_threshold=refresh_threshold,
+                persistent_cache=persistent_cache, **self._engine_opts)
+            digests = dict(manifest.get("graph_digests") or {})
+            graphs = _recovery.load_graphs(durable_dir, manifest)
+            for name in sorted(digests):
+                model = self._models.get(name)
+                if model is None:
+                    continue
+                graph = graphs.get(name)
+                if graph is not None:
+                    fp = graph.fingerprint()
+                else:
+                    fp = engine.extract(model).graph.fingerprint()
+                if fp != digests[name]:
+                    raise RecoveryError(
+                        f"recovery verification failed for model "
+                        f"{name!r}: extracted fingerprint {fp} != "
+                        f"manifest digest {digests[name]} at epoch "
+                        f"{manifest_epoch}")
+                if graph is not None:
+                    engine.adopt_extraction(model, graph,
+                                            epoch=db_at_p.epoch)
+                verified[name] = fp
+            replayed, skipped, truncated = _recovery.replay_wal(
+                db, durable_dir)
+            snap_db = db_at_p
+        db.attach_wal(durable_dir)
+        obs.failure_counter("durability_recoveries_total", path=path).inc()
+        self.recovery = RecoveryReport(
+            path=path, manifest_epoch=manifest_epoch,
+            live_epoch=db.epoch, replayed_records=replayed,
+            skipped_records=skipped, truncated_bytes=truncated,
+            verified=verified)
+        log.info("recovered %s: %s", durable_dir, self.recovery.summary())
+        return db, snap_db, engine
 
     # -- model registry ------------------------------------------------------
     def register_model(self, name: str, model: GraphModel) -> None:
@@ -159,18 +266,49 @@ class GraphService:
 
         Served snapshots are untouched until :meth:`refresh` publishes the
         next epoch.  Returns the live (unpublished) epoch.
+
+        Each database op is retried individually on
+        :class:`RetryableError` (e.g. a transient WAL-append fault):
+        WAL-first commit means a failed op left no in-memory state behind,
+        so a per-op retry can never double-apply — retrying the *whole*
+        mutation could.
         """
         with self._db_lock:
             if delete_mask is not None:
-                self._db.delete_rows(table, np.asarray(delete_mask))
+                self._retrying("mutate", lambda: self._db.delete_rows(
+                    table, np.asarray(delete_mask)))
             if delete_where is not None:
                 col, op, value = delete_where
-                self._db.delete_where(table, col, op, value)
+                self._retrying("mutate", lambda: self._db.delete_where(
+                    table, col, op, value))
             if insert:
-                self._db.insert_rows(
-                    table, **{k: np.asarray(v) for k, v in insert.items()})
+                cols = {k: np.asarray(v) for k, v in insert.items()}
+                self._retrying("mutate", lambda: self._db.insert_rows(
+                    table, **cols))
             return {"table": table, "live_epoch": self._db.epoch,
                     "served_epoch": self._store.current_epoch()}
+
+    def _retrying(self, op: str, fn: Callable[[], object]) -> object:
+        """Run ``fn``, retrying :class:`RetryableError` with backoff.
+
+        Bounded at ``retry_attempts`` total tries; anything else (including
+        :class:`~repro.durability.faults.FatalFaultInjected`) propagates on
+        the first throw.
+        """
+        attempt = 1
+        while True:
+            try:
+                return fn()
+            except RetryableError as e:
+                if attempt >= self._retry_attempts:
+                    raise
+                obs.failure_counter("serving_retries_total", op=op).inc()
+                delay = max(getattr(e, "retry_after", 0.0) or 0.0,
+                            min(0.2, 0.01 * (2 ** (attempt - 1))))
+                log.warning("retryable failure in %s (attempt %d/%d): %s",
+                            op, attempt, self._retry_attempts, e)
+                time.sleep(delay)
+                attempt += 1
 
     def refresh(self) -> Dict[str, object]:
         """Build the next epoch off to the side and publish it atomically.
@@ -180,46 +318,149 @@ class GraphService:
         incremental refresh (delta propagation below the churn threshold,
         full re-extract above it).  Readers pinned to older epochs are
         never blocked and never observe intermediate state.
+
+        Failure containment: a refresh that throws mid-build discards the
+        side build entirely — epoch E keeps serving, the service turns
+        ``degraded`` (visible in :meth:`healthz`), and the next refresh
+        retries after an exponential backoff window (``path="backoff"``
+        while the window is open).  A success clears the degraded flag and
+        — when a ``durable_dir`` is configured — checkpoints the manifest
+        and prunes published WAL segments.
         """
         t0 = time.perf_counter()
         with self._build_lock, obs.span("serve.refresh") as sp:
-            with self._db_lock:
-                new_db = self._db.snapshot()
-            with self._store.pin() as cur:
-                if new_db.epoch == cur.epoch:
-                    sp.set(path="noop", epoch=cur.epoch)
-                    return {"path": "noop", "epoch": cur.epoch,
-                            "build_s": 0.0}
-                new_engine = cur.engine.fork(new_db)
-            paths: Dict[str, str] = {}
-            for name, model in sorted(self._models.items()):
-                res = new_engine.refresh(model)
-                paths[name] = res.refresh.path if res.refresh else "cold"
-            snap = self._store.publish(Snapshot(
-                epoch=new_db.epoch, db=new_db, engine=new_engine))
+            now = time.monotonic()
+            if self._degraded is not None and now < self._refresh_retry_at:
+                remaining = round(self._refresh_retry_at - now, 3)
+                sp.set(path="backoff", retry_in_s=remaining)
+                return {"path": "backoff",
+                        "epoch": self._store.current_epoch(),
+                        "cause": self._degraded.get("cause"),
+                        "retry_in_s": remaining, "build_s": 0.0}
+            try:
+                with self._db_lock:
+                    new_db = self._db.snapshot()
+                with self._store.pin() as cur:
+                    if new_db.epoch == cur.epoch:
+                        sp.set(path="noop", epoch=cur.epoch)
+                        return {"path": "noop", "epoch": cur.epoch,
+                                "build_s": 0.0}
+                    new_engine = cur.engine.fork(new_db)
+                paths: Dict[str, str] = {}
+                digests: Dict[str, str] = {}
+                graphs: Dict[str, object] = {}
+                for name, model in sorted(self._models.items()):
+                    res = self._retrying(
+                        "refresh", lambda m=model: new_engine.refresh(m))
+                    paths[name] = (res.refresh.path if res.refresh
+                                   else "cold")
+                    digests[name] = res.graph.fingerprint()
+                    graphs[name] = res.graph
+                faults.fire("refresh.midflight")
+                snap = self._store.publish(Snapshot(
+                    epoch=new_db.epoch, db=new_db, engine=new_engine))
+            except Exception as e:
+                self._refresh_failures += 1
+                backoff = min(30.0,
+                              0.05 * (2 ** (self._refresh_failures - 1)))
+                self._refresh_retry_at = time.monotonic() + backoff
+                self._degraded = {
+                    "cause": f"refresh failed: {e}",
+                    "exception": type(e).__name__,
+                    "failures": self._refresh_failures,
+                    "retry_in_s": backoff,
+                }
+                obs.failure_counter("serving_refresh_failures_total",
+                                    exception=type(e).__name__).inc()
+                log.warning("refresh failed (still serving epoch %d): %s",
+                            self._store.current_epoch(), e)
+                sp.set(path="failed", error=str(e))
+                return {"path": "failed", "error": str(e),
+                        "retryable": True,
+                        "epoch": self._store.current_epoch(),
+                        "retry_in_s": backoff,
+                        "build_s": round(time.perf_counter() - t0, 4)}
+            self._degraded = None
+            self._refresh_failures = 0
+            self._refresh_retry_at = 0.0
+            out = {"path": "published", "epoch": snap.epoch,
+                   "models": paths,
+                   "build_s": round(time.perf_counter() - t0, 4)}
+            persist = self._persist_published(new_db, digests, graphs)
+            if persist is not None:
+                out["persist"] = persist
             sp.set(path="published", epoch=snap.epoch, models=paths)
-            return {"path": "published", "epoch": snap.epoch,
-                    "models": paths,
-                    "build_s": round(time.perf_counter() - t0, 4)}
+            return out
+
+    def _persist_published(self, new_db: Database,
+                           digests: Dict[str, str],
+                           graphs: Optional[Dict[str, object]] = None
+                           ) -> Optional[Dict[str, object]]:
+        """Checkpoint the just-published epoch; contained on failure.
+
+        The publish already happened and stands — a persist failure only
+        marks the service degraded (the *next* successful refresh writes a
+        fresh manifest covering this epoch too) and counts
+        ``serving_persist_failures_total``.
+        """
+        if self._durable_dir is None:
+            return None
+        try:
+            specs: Dict[str, Dict] = {}
+            for name, model in sorted(self._models.items()):
+                try:
+                    specs[name] = model_to_spec(model)
+                except Exception:
+                    continue    # non-spec-expressible model: recoverable
+                                # only if re-registered by the caller
+            _recovery.write_manifest(self._durable_dir, new_db, specs,
+                                     digests, graphs=graphs)
+            pruned = 0
+            wal = self._db.wal
+            if wal is not None:
+                # rotate/prune under the db lock: the WAL is single-writer
+                # and mutate() appends under this same lock
+                with self._db_lock:
+                    wal.rotate()
+                    pruned = wal.prune(new_db.epoch)
+            return {"manifest_epoch": new_db.epoch,
+                    "pruned_segments": pruned}
+        except Exception as e:
+            obs.failure_counter("serving_persist_failures_total",
+                                exception=type(e).__name__).inc()
+            self._degraded = {"cause": f"persist failed: {e}",
+                              "exception": type(e).__name__,
+                              "failures": self._refresh_failures,
+                              "retry_in_s": 0.0}
+            log.warning("manifest persist failed (epoch %d still "
+                        "published): %s", new_db.epoch, e)
+            return {"error": str(e)}
 
     # -- read side -----------------------------------------------------------
     def submit_extract(self, model: ModelRef, method: str = "extgraph",
                        tenant: str = DEFAULT_TENANT,
                        epoch: Optional[int] = None,
-                       request_id: Optional[str] = None
+                       request_id: Optional[str] = None,
+                       deadline_s: Optional[float] = None
                        ) -> Tuple[Future, Dict[str, object]]:
         """Schedule an extract; returns ``(future, request_meta)``.
 
-        Raises :class:`QuotaExceeded` / :class:`AdmissionError` at the door
-        (never after work started).  The future resolves to the shared
-        JSON-ready payload; ``request_meta`` carries per-request facts
-        (coalesced / cache source / epoch) that are not shared.
+        Raises :class:`QuotaExceeded` / :class:`AdmissionError` /
+        :class:`DeadlineExceeded` at the door (never after work started).
+        The future resolves to the shared JSON-ready payload;
+        ``request_meta`` carries per-request facts (coalesced / cache
+        source / epoch) that are not shared.
         """
         name, m = self._resolve_model(model)
         key = ("extract", name, model_signature(m), method)
 
         def work(snap: Snapshot) -> Dict[str, object]:
-            res = snap.engine.extract(m, method=method)
+            # auto_refresh: serve the maintained result when one exists —
+            # on an immutable snapshot that is a pure cache hit (and it is
+            # what lets a recovered epoch serve its adopted checkpoint
+            # graph without re-extracting); first requests fall through to
+            # the ordinary full extract
+            res = snap.engine.extract(m, method=method, auto_refresh=True)
             g = res.graph
             with obs.span("payload", category="transfer"):
                 return {
@@ -237,13 +478,15 @@ class GraphService:
                 }
 
         return self._admit_and_submit(tenant, key, epoch, work,
-                                      kind="extract", request_id=request_id)
+                                      kind="extract", request_id=request_id,
+                                      deadline_s=deadline_s)
 
     def submit_analyze(self, model: ModelRef, algorithm: str = "pagerank",
                        method: str = "extgraph",
                        tenant: str = DEFAULT_TENANT,
                        epoch: Optional[int] = None,
                        request_id: Optional[str] = None,
+                       deadline_s: Optional[float] = None,
                        **params) -> Tuple[Future, Dict[str, object]]:
         """Schedule extract+algorithm; returns ``(future, request_meta)``."""
         name, m = self._resolve_model(model)
@@ -266,7 +509,8 @@ class GraphService:
                 }
 
         return self._admit_and_submit(tenant, key, epoch, work,
-                                      kind="analyze", request_id=request_id)
+                                      kind="analyze", request_id=request_id,
+                                      deadline_s=deadline_s)
 
     def submit_discover(self, tables: Optional[list] = None, *,
                         sample: int = 512, use_name_hints: bool = True,
@@ -274,7 +518,8 @@ class GraphService:
                         top: Optional[int] = None,
                         tenant: str = DEFAULT_TENANT,
                         epoch: Optional[int] = None,
-                        request_id: Optional[str] = None
+                        request_id: Optional[str] = None,
+                        deadline_s: Optional[float] = None
                         ) -> Tuple[Future, Dict[str, object]]:
         """Schedule schema-to-graph discovery; returns ``(future, meta)``.
 
@@ -316,15 +561,18 @@ class GraphService:
 
         return self._admit_and_submit(tenant, key, epoch, work,
                                       kind="discover",
-                                      request_id=request_id)
+                                      request_id=request_id,
+                                      deadline_s=deadline_s)
 
     def extract(self, model: ModelRef, method: str = "extgraph",
                 tenant: str = DEFAULT_TENANT, epoch: Optional[int] = None,
                 timeout: Optional[float] = None,
-                request_id: Optional[str] = None) -> Dict[str, object]:
+                request_id: Optional[str] = None,
+                deadline_s: Optional[float] = None) -> Dict[str, object]:
         """Blocking :meth:`submit_extract`; merges per-request meta in."""
         fut, meta = self.submit_extract(model, method=method, tenant=tenant,
-                                        epoch=epoch, request_id=request_id)
+                                        epoch=epoch, request_id=request_id,
+                                        deadline_s=deadline_s)
         return {**fut.result(timeout), **meta}
 
     def analyze(self, model: ModelRef, algorithm: str = "pagerank",
@@ -332,11 +580,13 @@ class GraphService:
                 epoch: Optional[int] = None,
                 timeout: Optional[float] = None,
                 request_id: Optional[str] = None,
+                deadline_s: Optional[float] = None,
                 **params) -> Dict[str, object]:
         """Blocking :meth:`submit_analyze`; merges per-request meta in."""
         fut, meta = self.submit_analyze(model, algorithm=algorithm,
                                         method=method, tenant=tenant,
                                         epoch=epoch, request_id=request_id,
+                                        deadline_s=deadline_s,
                                         **params)
         return {**fut.result(timeout), **meta}
 
@@ -345,12 +595,13 @@ class GraphService:
                  accept_threshold: float = 0.5, top: Optional[int] = None,
                  tenant: str = DEFAULT_TENANT, epoch: Optional[int] = None,
                  timeout: Optional[float] = None,
-                 request_id: Optional[str] = None) -> Dict[str, object]:
+                 request_id: Optional[str] = None,
+                 deadline_s: Optional[float] = None) -> Dict[str, object]:
         """Blocking :meth:`submit_discover`; merges per-request meta in."""
         fut, meta = self.submit_discover(
             tables, sample=sample, use_name_hints=use_name_hints,
             accept_threshold=accept_threshold, top=top, tenant=tenant,
-            epoch=epoch, request_id=request_id)
+            epoch=epoch, request_id=request_id, deadline_s=deadline_s)
         return {**fut.result(timeout), **meta}
 
     # -- shared submit plumbing ----------------------------------------------
@@ -364,7 +615,8 @@ class GraphService:
     def _admit_and_submit(self, tenant: str, base_key: Hashable,
                           epoch: Optional[int], work,
                           kind: str = "request",
-                          request_id: Optional[str] = None
+                          request_id: Optional[str] = None,
+                          deadline_s: Optional[float] = None
                           ) -> Tuple[Future, Dict[str, object]]:
         t_submit = time.perf_counter()
         trace_id = obs.sanitize_trace_id(request_id) or obs.new_trace_id()
@@ -411,16 +663,29 @@ class GraphService:
                           epoch=snap.epoch) as root:
                 obs.TRACER.record("queue.wait", t_submit,
                                   time.perf_counter(), category="queue")
-                payload = work(snap)
+                payload = self._retrying(kind, lambda: work(snap))
                 payload["trace_id"] = root.trace_id
                 return payload
 
         try:
-            fut, joined = self._scheduler.submit_ex(key, traced_work)
+            fut, joined = self._scheduler.submit_ex(key, traced_work,
+                                                    deadline_s=deadline_s)
         except AdmissionError:
             pin_ctx.__exit__(None, None, None)
             self._quotas.release(tenant)
             self._count_serve(kind, tenant, "rejected-queue")
+            raise
+        except DeadlineExceeded:
+            pin_ctx.__exit__(None, None, None)
+            self._quotas.release(tenant)
+            self._count_serve(kind, tenant, "rejected-deadline")
+            raise
+        except ServiceClosed:
+            pin_ctx.__exit__(None, None, None)
+            self._quotas.release(tenant)
+            self._count_serve(kind, tenant, "rejected-closed")
+            obs.failure_counter("serving_closed_rejections_total",
+                                kind=kind).inc()
             raise
         except BaseException:
             pin_ctx.__exit__(None, None, None)
@@ -471,13 +736,37 @@ class GraphService:
         return fut, meta
 
     # -- observability / lifecycle -------------------------------------------
+    def healthz(self) -> Dict[str, object]:
+        """Liveness + degradation for the HTTP health endpoint.
+
+        ``status`` is ``"ok"`` or ``"degraded"`` (last refresh or persist
+        failed; epoch E is still served, the cause and backoff are
+        attached).  A recovered process also reports what its restart did.
+        """
+        degraded = self._degraded
+        with self._db_lock:
+            live_epoch = self._db.epoch
+        out: Dict[str, object] = {
+            "status": "degraded" if degraded else "ok",
+            "ok": degraded is None,
+            "served_epoch": self._store.current_epoch(),
+            "live_epoch": live_epoch,
+        }
+        if degraded:
+            out["degraded"] = dict(degraded)
+        if self.recovery is not None:
+            out["recovery"] = self.recovery.summary()
+        return out
+
     def stats(self) -> Dict[str, object]:
         """One structure for the stats endpoint and the benchmarks."""
         with self._store.pin() as snap:
             engine_info = snap.engine.cache_info()
         with self._db_lock:
             live_epoch = self._db.epoch
-        return {
+            wal = self._db.wal
+            wal_stats = wal.stats() if wal is not None else None
+        out = {
             "served_epoch": self._store.current_epoch(),
             "live_epoch": live_epoch,
             "models": self.models(),
@@ -488,10 +777,28 @@ class GraphService:
             "persistent_compilation_cache":
                 persistent_compilation_cache_dir(),
             "uptime_s": round(time.time() - self.started_at, 1),
+            "degraded": dict(self._degraded) if self._degraded else None,
         }
+        if self._durable_dir is not None:
+            out["durability"] = {
+                "dir": self._durable_dir,
+                "wal": wal_stats,
+                "recovery": (self.recovery.summary()
+                             if self.recovery else None),
+            }
+        return out
 
     def close(self) -> None:
-        self._scheduler.shutdown(wait=True)
+        """Drain and stop: terminal, idempotent.
+
+        In-flight requests complete (their futures resolve with results or
+        their work's exception); queued-but-unstarted ones fail fast with
+        :class:`ServiceClosed`.  The WAL is flushed and closed last, after
+        no worker can mutate through the service anymore.
+        """
+        self._scheduler.close(wait=True)
+        with self._db_lock:
+            self._db.detach_wal()
 
     def __enter__(self) -> "GraphService":
         return self

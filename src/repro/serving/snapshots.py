@@ -29,6 +29,7 @@ from typing import Dict, Iterator, List, Optional
 
 from repro.api.engine import ExtractionEngine
 from repro.core.database import Database
+from repro.durability import faults
 
 
 @dataclasses.dataclass
@@ -112,6 +113,9 @@ class SnapshotStore:
         Re-publishing an epoch that is already current is a no-op (the
         existing snapshot stays, so its warmed caches are not thrown away).
         """
+        # fault site fires before any store state moves: an injected
+        # publish failure leaves the previous epoch fully intact
+        faults.fire("snapshot.publish")
         with self._lock:
             if snap.epoch == self._current.epoch:
                 return self._current
@@ -139,6 +143,16 @@ class SnapshotStore:
             self.dropped += 1
         self._order = [e for e in self._order if e in self._snapshots]
 
+    def pinned_epochs(self) -> List[int]:
+        """Epochs currently borrowed by at least one reader.
+
+        The pin-leak invariant of the serving layer: after every request
+        settles — success, worker raise, deadline expiry, injected publish
+        failure — this must drain back to ``[]``.
+        """
+        with self._lock:
+            return sorted(e for e, s in self._snapshots.items() if s.pins)
+
     def stats(self) -> Dict[str, object]:
         with self._lock:
             return {
@@ -146,6 +160,8 @@ class SnapshotStore:
                 "epochs": sorted(self._snapshots),
                 "pins": {e: s.pins for e, s in self._snapshots.items()
                          if s.pins},
+                "pinned_epochs": sorted(e for e, s in self._snapshots.items()
+                                        if s.pins),
                 "published": self.published,
                 "dropped": self.dropped,
             }

@@ -1,0 +1,516 @@
+"""Durability subsystem: WAL, warm-restart recovery, fault injection.
+
+The acceptance properties hammered here:
+
+* **WAL correctness** — every committed mutation replays bit-identically;
+  a torn tail (partial last record) is detected, truncated, and the
+  repair sticks; corruption inside a *sealed* segment refuses to load;
+  epochs are strictly monotonic on the wire.
+* **Recovery parity** — checkpoint restore + tail replay reproduces the
+  exact table contents and incremental statistics of the process that
+  died, verified by graph-fingerprint (bag-digest) equality; recovering
+  twice is idempotent; pruned-then-recovered state is complete.
+* **Fault matrix** — every injection site × {extract, analyze, refresh,
+  mutate} either succeeds after bounded retry, degrades visibly in
+  ``healthz`` while the old epoch keeps serving, or surfaces a structured
+  retryable error.  Never a wedged scheduler, an unresolved future, or a
+  leaked snapshot pin.
+"""
+import os
+import time as _time
+
+import numpy as np
+import pytest
+
+from repro.api.engine import ExtractionEngine
+from repro.core.database import Database
+from repro.durability import (
+    FatalFaultInjected,
+    FaultInjected,
+    FaultPlan,
+    FaultRule,
+    INJECTOR,
+    RecoveryError,
+    RetryableError,
+    WALCorruption,
+    WALError,
+    faults,
+    load_manifest,
+    read_all,
+    recover_database,
+    replay_wal,
+    restore_database,
+    write_manifest,
+)
+from repro.durability.wal import WriteAheadLog
+from repro.relational import Table
+from repro.serving import GraphService
+
+from test_serving import _follows_model, _grow_follows, make_social
+
+
+@pytest.fixture(autouse=True)
+def _no_leftover_faults():
+    faults.uninstall()
+    yield
+    faults.uninstall()
+
+
+def _durable_db(dirpath, **kw) -> Database:
+    db = make_social(**kw)
+    db.attach_wal(str(dirpath))
+    return db
+
+
+def _db_digest(db: Database) -> dict:
+    """Per-table content digest (valid rows only) + recorded stats."""
+    out = {}
+    for name in sorted(db.tables):
+        data = db.tables[name].to_numpy()
+        out[name] = {col: data[col].tobytes() for col in sorted(data)}
+        out[name]["__stats__"] = repr(db.stats[name])
+    return out
+
+
+def _mutate_some(db: Database, seed=3, n=5) -> None:
+    _grow_follows(db, n=n, seed=seed)
+    db.delete_where("follows", "rid", "<", 2)
+
+
+# ---------------------------------------------------------------------------
+# WAL: roundtrip, torn tail, corruption, rotation, monotonicity
+# ---------------------------------------------------------------------------
+
+def test_wal_full_replay_reconstructs_database(tmp_path):
+    db = _durable_db(tmp_path)
+    _mutate_some(db)
+    _grow_follows(db, n=3, seed=11)
+    want = _db_digest(db)
+    epoch = db.epoch
+    db.detach_wal()
+
+    # cold contract: the base is the caller's deterministically
+    # reconstructed pre-WAL database; the WAL replays everything after
+    recovered, report = recover_database(str(tmp_path), make_social())
+    assert report.path == "cold"            # no manifest was ever written
+    assert recovered.epoch == epoch
+    assert _db_digest(recovered) == want
+
+
+def test_wal_replay_is_idempotent(tmp_path):
+    db = _durable_db(tmp_path)
+    _mutate_some(db)
+    want = _db_digest(db)
+    db.detach_wal()
+
+    first, _ = recover_database(str(tmp_path), make_social())
+    again, report = recover_database(str(tmp_path), make_social())
+    assert _db_digest(first) == _db_digest(again) == want
+    # a database already at the live epoch skips every record
+    replayed, skipped, _ = replay_wal(first.snapshot(), str(tmp_path))
+    assert replayed == 0 and skipped > 0
+
+
+def test_wal_torn_tail_truncated_and_repair_sticks(tmp_path):
+    db = _durable_db(tmp_path)
+    _grow_follows(db, n=2, seed=1)
+    _grow_follows(db, n=2, seed=2)
+    db.detach_wal()
+
+    (active,) = [f for f in os.listdir(tmp_path) if f.endswith(".open")]
+    path = os.path.join(tmp_path, active)
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:          # tear the last record in half
+        f.truncate(size - 7)
+
+    records, truncated = read_all(str(tmp_path), repair=True)
+    assert truncated > 0
+    epochs = [r.epoch for r in records]
+    assert epochs == sorted(epochs)
+    # repair is physical: a second scan sees a clean log
+    records2, truncated2 = read_all(str(tmp_path))
+    assert truncated2 == 0
+    assert [r.epoch for r in records2] == epochs
+    # and appending resumes after the repaired tail
+    wal = WriteAheadLog(str(tmp_path))
+    assert wal.stats()["last_epoch"] == epochs[-1]
+    wal.close()
+
+
+def test_wal_sealed_segment_corruption_raises(tmp_path):
+    wal = WriteAheadLog(str(tmp_path))
+    wal.append_replace("t", 1, {"x": np.arange(4)}, capacity=4)
+    assert wal.rotate()
+    wal.close()
+    (seg,) = [f for f in os.listdir(tmp_path) if f.endswith(".seg")]
+    path = os.path.join(tmp_path, seg)
+    blob = bytearray(open(path, "rb").read())
+    blob[len(blob) // 2] ^= 0xFF          # flip one payload byte
+    open(path, "wb").write(bytes(blob))
+    with pytest.raises(WALCorruption):
+        read_all(str(tmp_path))
+
+
+def test_wal_epochs_strictly_monotonic(tmp_path):
+    wal = WriteAheadLog(str(tmp_path))
+    wal.append_replace("t", 3, {"x": np.arange(2)}, capacity=2)
+    with pytest.raises(WALError):
+        wal.append_replace("t", 3, {"x": np.arange(2)}, capacity=2)
+    with pytest.raises(WALError):
+        wal.append_replace("t", 1, {"x": np.arange(2)}, capacity=2)
+    wal.append_replace("t", 4, {"x": np.arange(2)}, capacity=2)
+    wal.close()
+
+
+def test_wal_rotation_and_prune_respect_published_epoch(tmp_path):
+    db = _durable_db(tmp_path)
+    _grow_follows(db, n=2, seed=1)
+    published = db.epoch
+    db.wal.rotate()                        # seal everything up to `published`
+    _grow_follows(db, n=2, seed=2)         # unpublished tail
+    assert db.wal.prune(published) == 1    # the sealed segment goes
+    assert db.wal.prune(published) == 0    # idempotent
+    stats = db.wal.stats()
+    assert stats["sealed_segments"] == 0 and stats["last_epoch"] == db.epoch
+    db.detach_wal()
+
+
+def test_wal_epoch_gap_after_overeager_prune_raises(tmp_path):
+    db = _durable_db(tmp_path)
+    _grow_follows(db, n=2, seed=1)
+    db.wal.rotate()
+    _grow_follows(db, n=2, seed=2)
+    db.wal.prune(db.epoch - 1)             # drop history nobody checkpointed
+    db.detach_wal()
+    with pytest.raises(RecoveryError, match="gap"):
+        recover_database(str(tmp_path), make_social())
+
+
+# ---------------------------------------------------------------------------
+# manifest + checkpoint recovery
+# ---------------------------------------------------------------------------
+
+def test_manifest_restore_preserves_tables_stats_and_epoch(tmp_path):
+    db = _durable_db(tmp_path)
+    _mutate_some(db)
+    manifest = write_manifest(str(tmp_path), db, {}, {})
+    restored = restore_database(str(tmp_path), load_manifest(str(tmp_path)))
+    assert restored.epoch == db.epoch == manifest["epoch"]
+    assert _db_digest(restored) == _db_digest(db)
+    for name, table in db.tables.items():
+        assert restored.tables[name].capacity == table.capacity
+    db.detach_wal()
+
+
+def test_prune_then_recover_from_checkpoint_plus_tail(tmp_path):
+    db = _durable_db(tmp_path)
+    _mutate_some(db)
+    write_manifest(str(tmp_path), db, {}, {})   # publish point P
+    db.wal.rotate()
+    assert db.wal.prune(db.epoch) >= 1          # history ≤ P is gone
+    _grow_follows(db, n=4, seed=9)              # unpublished tail past P
+    want = _db_digest(db)
+    live = db.epoch
+    db.detach_wal()
+
+    recovered, report = recover_database(str(tmp_path), Database())
+    assert report.path == "checkpoint"
+    assert report.replayed_records == 1 and report.live_epoch == live
+    assert _db_digest(recovered) == want
+
+
+def test_missing_manifest_cold_path_is_loud(tmp_path, caplog):
+    db = _durable_db(tmp_path)
+    _grow_follows(db, n=2, seed=1)
+    db.detach_wal()
+    with caplog.at_level("WARNING", logger="repro.durability"):
+        _, report = recover_database(str(tmp_path), make_social())
+    assert report.path == "cold" and report.manifest_epoch is None
+    assert any("no manifest" in r.message for r in caplog.records)
+
+
+def test_recovery_graph_fingerprint_parity_via_engine(tmp_path):
+    """The headline invariant: kill → recover → bit-identical graphs."""
+    model = _follows_model()
+    db = _durable_db(tmp_path)
+    engine = ExtractionEngine(db.snapshot(), compiled=False)
+    digest_p = engine.extract(model).graph.fingerprint()
+    write_manifest(str(tmp_path), db, {}, {"social": digest_p})
+    _mutate_some(db)                      # tail the manifest doesn't cover
+    ref = ExtractionEngine(db.snapshot(), compiled=False) \
+        .extract(model).graph.fingerprint()
+    db.detach_wal()                       # "crash": WAL abandoned mid-life
+
+    recovered, report = recover_database(str(tmp_path), Database())
+    assert report.path == "checkpoint"
+    got = ExtractionEngine(recovered.snapshot(), compiled=False) \
+        .extract(model).graph.fingerprint()
+    assert got == ref != digest_p
+
+
+# ---------------------------------------------------------------------------
+# fault-injection harness semantics
+# ---------------------------------------------------------------------------
+
+def test_fault_rule_times_and_after_windows(tmp_path):
+    rule = FaultRule(site="wal.append", action="raise", times=1, after=1)
+    db = _durable_db(tmp_path)
+    with faults.inject(rule):
+        _grow_follows(db, n=1, seed=1)             # after-window: passes
+        with pytest.raises(FaultInjected):
+            _grow_follows(db, n=1, seed=2)         # fires
+        _grow_follows(db, n=1, seed=3)             # exhausted: passes
+    assert rule.matched == 3 and rule.fired == 1
+    assert not INJECTOR.active()
+    db.detach_wal()
+
+
+def test_fault_plan_json_roundtrip_and_restore():
+    plan = FaultPlan.from_json(
+        '{"rules": [{"site": "wal.fsync", "action": "delay",'
+        ' "delay_s": 0.001, "times": 2}]}')
+    assert plan.rules[0].site == "wal.fsync"
+    outer = FaultRule(site="snapshot.publish", action="raise")
+    faults.install(FaultPlan(rules=[outer]))
+    with faults.inject(plan):
+        assert INJECTOR.stats()["rules"][0]["site"] == "wal.fsync"
+    assert INJECTOR.stats()["rules"][0]["site"] == "snapshot.publish"
+    faults.uninstall()
+    assert not INJECTOR.active()
+
+
+def test_fatal_fault_is_not_retryable():
+    assert issubclass(FaultInjected, RetryableError)
+    assert not issubclass(FatalFaultInjected, RetryableError)
+
+
+def test_injected_fsync_failure_keeps_memory_and_disk_consistent(tmp_path):
+    """A durability refusal must not half-commit: memory stays at the old
+    epoch AND the WAL stays physically clean, so retrying just works."""
+    db = _durable_db(tmp_path)
+    _grow_follows(db, n=1, seed=1)
+    epoch = db.epoch
+    rows = int(np.asarray(db.tables["follows"].valid).sum())
+    with faults.inject(FaultRule(site="wal.fsync", action="raise", times=1)):
+        with pytest.raises(FaultInjected):
+            db.insert_rows("follows",
+                           rid=np.array([900], np.int32),
+                           src_sk=np.array([0], np.int32),
+                           dst_sk=np.array([1], np.int32))
+    assert db.epoch == epoch
+    assert int(np.asarray(db.tables["follows"].valid).sum()) == rows
+    records, truncated = read_all(str(tmp_path))
+    assert truncated == 0 and records[-1].epoch == epoch
+    # the retry commits cleanly on the same WAL
+    db.insert_rows("follows", rid=np.array([900], np.int32),
+                   src_sk=np.array([0], np.int32),
+                   dst_sk=np.array([1], np.int32))
+    assert db.epoch == epoch + 1
+    db.detach_wal()
+    recovered, _ = recover_database(str(tmp_path), make_social())
+    assert _db_digest(recovered) == _db_digest(db)
+
+
+def test_partial_write_fault_torn_then_recovered(tmp_path):
+    db = _durable_db(tmp_path)
+    _grow_follows(db, n=1, seed=1)
+    want = _db_digest(db)
+    epoch = db.epoch
+    with faults.inject(FaultRule(site="wal.append", action="partial",
+                                 fraction=0.4, times=1)):
+        with pytest.raises(FaultInjected):
+            _grow_follows(db, n=2, seed=2)
+    assert db.epoch == epoch              # in-memory state refused the write
+    db.detach_wal()
+    recovered, report = recover_database(str(tmp_path), make_social())
+    assert report.truncated_bytes > 0     # the torn half-record was cut
+    assert _db_digest(recovered) == want
+
+
+# ---------------------------------------------------------------------------
+# GraphService: durable serving, degraded refresh, recovery verification
+# ---------------------------------------------------------------------------
+
+def _durable_service(tmp_path, **kw) -> GraphService:
+    kw.setdefault("compiled", False)
+    return GraphService(make_social(), {"social": _follows_model()},
+                        durable_dir=str(tmp_path), **kw)
+
+
+def _refresh_until_published(svc, timeout=5.0):
+    deadline = _time.monotonic() + timeout
+    while _time.monotonic() < deadline:
+        out = svc.refresh()
+        if out["path"] in ("published", "noop"):
+            return out
+        _time.sleep(min(0.05, out.get("retry_in_s") or 0.05))
+    raise AssertionError("refresh never recovered")
+
+
+def test_service_crash_recovery_bit_identical(tmp_path):
+    svc = _durable_service(tmp_path)
+    svc.extract("social")
+    _grow_follows(svc, n=3, seed=5)
+    assert svc.refresh()["path"] == "published"     # manifest at P
+    _grow_follows(svc, n=2, seed=6)                 # unpublished tail
+    ref_db = svc._db.snapshot()
+    ref = ExtractionEngine(ref_db, compiled=False) \
+        .extract(_follows_model()).graph.fingerprint()
+    svc._db.detach_wal()                            # simulate SIGKILL
+
+    svc2 = GraphService(Database(), compiled=False,
+                        durable_dir=str(tmp_path))
+    assert svc2.recovery.path == "checkpoint"
+    assert svc2.recovery.verified["social"]         # digest parity held
+    assert "social" in svc2.models()                # registry from manifest
+    svc2.refresh()
+    assert svc2.extract("social")["fingerprint"] == ref
+    assert svc2.healthz()["recovery"]["replayed_records"] == 1
+    svc2.close()
+
+
+def test_service_recovery_rejects_digest_mismatch(tmp_path):
+    svc = _durable_service(tmp_path)
+    _grow_follows(svc, n=2, seed=5)
+    assert svc.refresh()["path"] == "published"
+    svc._db.detach_wal()
+    # tamper: the manifest promises a fingerprint the tables can't produce
+    import json
+    mpath = os.path.join(str(tmp_path), "MANIFEST.json")
+    manifest = json.load(open(mpath))
+    manifest["graph_digests"]["social"] = "0" * 16
+    open(mpath, "w").write(json.dumps(manifest))
+    with pytest.raises(RecoveryError, match="verification failed"):
+        GraphService(Database(), compiled=False, durable_dir=str(tmp_path))
+
+
+def test_refresh_failure_contained_and_backoff_then_recovers(tmp_path):
+    svc = _durable_service(tmp_path)
+    served = svc.extract("social")["fingerprint"]
+    _grow_follows(svc, n=2, seed=5)
+    with faults.inject(FaultRule(site="snapshot.publish", action="raise",
+                                 times=1)):
+        out = svc.refresh()
+    assert out["path"] == "failed" and out["retryable"]
+    assert out["epoch"] == 0                        # old epoch still current
+    health = svc.healthz()
+    assert health["status"] == "degraded"
+    assert "refresh failed" in health["degraded"]["cause"]
+    # epoch 0 keeps serving bit-identically while degraded
+    assert svc.extract("social")["fingerprint"] == served
+    # inside the backoff window the next refresh doesn't even try
+    out2 = svc.refresh()
+    if out2["path"] == "backoff":
+        assert out2["retry_in_s"] > 0
+    # after the window, the build succeeds and degradation clears
+    out3 = _refresh_until_published(svc)
+    assert out3["path"] == "published"
+    assert svc.healthz()["status"] == "ok"
+    assert svc.extract("social")["fingerprint"] != served
+    svc.close()
+
+
+def test_mutate_succeeds_after_transient_wal_fault(tmp_path):
+    svc = _durable_service(tmp_path)
+    rule = FaultRule(site="wal.append", action="raise", times=1)
+    with faults.inject(rule):
+        out = _grow_follows(svc, n=2, seed=5)
+    assert rule.fired == 1                    # the fault really happened
+    assert out["live_epoch"] == 1             # ...and the retry committed
+    assert svc.refresh()["path"] == "published"
+    svc.close()
+
+
+def test_persist_failure_contained_publish_stands(tmp_path):
+    svc = _durable_service(tmp_path)
+    _grow_follows(svc, n=2, seed=5)
+    rule = FaultRule(site="wal.rename", action="raise", times=1)
+    with faults.inject(rule):
+        out = svc.refresh()                   # publish OK; persist's rotate
+    assert out["path"] == "published"         # trips the rename fault
+    assert rule.fired == 1
+    assert "error" in out["persist"]
+    assert svc.healthz()["status"] == "degraded"
+    assert svc.extract("social")["epoch"] == out["epoch"]
+    # next publish re-checkpoints and clears the degradation
+    _grow_follows(svc, n=1, seed=6)
+    out2 = svc.refresh()
+    assert out2["path"] == "published" and "error" not in out2["persist"]
+    assert svc.healthz()["status"] == "ok"
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# the fault matrix: site × operation, never wedged
+# ---------------------------------------------------------------------------
+
+SITES = ("wal.append", "wal.fsync", "wal.rename", "snapshot.publish",
+         "scheduler.worker", "refresh.midflight", "engine.cache_fill")
+OPS = ("extract", "analyze", "refresh", "mutate")
+
+
+def _run_op(svc, op, seed) -> str:
+    """One serving operation under an armed fault; classify the outcome."""
+    try:
+        if op == "extract":
+            svc.extract("social", timeout=30)
+        elif op == "analyze":
+            svc.analyze("social", algorithm="degree_stats", timeout=30)
+        elif op == "mutate":
+            _grow_follows(svc, n=1, seed=seed)
+        elif op == "refresh":
+            out = svc.refresh()
+            if out["path"] in ("failed", "backoff"):
+                return "degraded"
+            if "error" in (out.get("persist") or {}):
+                return "degraded"
+        return "ok"
+    except RetryableError:
+        return "structured-retryable"
+
+
+@pytest.mark.parametrize("site", SITES)
+def test_fault_matrix_site_never_wedges(tmp_path, site):
+    svc = _durable_service(tmp_path, max_workers=2)
+    svc.extract("social")                     # warm: epoch 0 serves
+    outcomes = {}
+    for i, op in enumerate(OPS):
+        _grow_follows(svc, n=1, seed=100 + i)     # fresh work per op
+        rule = FaultRule(site=site, action="raise", times=1)
+        with faults.inject(rule):
+            outcomes[op] = _run_op(svc, op, seed=200 + i)
+        assert outcomes[op] in ("ok", "degraded", "structured-retryable")
+        if outcomes[op] == "degraded":
+            assert svc.healthz()["status"] == "degraded"
+
+    # faults gone: the service must be fully functional, not wedged
+    _grow_follows(svc, n=1, seed=999)
+    assert _refresh_until_published(svc)["path"] in ("published", "noop")
+    final = svc.extract("social", timeout=30)
+    assert final["fingerprint"]
+    assert svc.healthz()["status"] == "ok"
+    # no leaked pins, no stuck queue entries, every future resolved
+    sched = svc._scheduler.stats()
+    assert sched["pending"] == 0 and sched["inflight"] == 0
+    assert svc._store.pinned_epochs() == []
+    tenants = svc._quotas.stats()
+    for tstats in tenants.values():
+        assert tstats.get("inflight", 0) == 0
+    svc.close()
+    # terminal: a post-close request that must reach the scheduler (a key
+    # never tenant-cached) fails fast and structured
+    from repro.serving import ServiceClosed
+    with pytest.raises(ServiceClosed):
+        svc.analyze("social", algorithm="pagerank", iterations=2)
+
+
+def test_fault_matrix_fatal_worker_fault_is_surfaced_not_retried(tmp_path):
+    svc = _durable_service(tmp_path)
+    with faults.inject(FaultRule(site="scheduler.worker",
+                                 action="raise_fatal", times=1)):
+        with pytest.raises(FatalFaultInjected):
+            svc.extract("social", timeout=30)
+    # the key is released: the next identical request recomputes fine
+    assert svc.extract("social", timeout=30)["fingerprint"]
+    assert svc._store.pinned_epochs() == []
+    svc.close()

@@ -670,3 +670,243 @@ def test_persistent_cache_env_var_reaches_engine(tmp_path):
              "REPRO_COMPILATION_CACHE": cache_dir})
     assert out.returncode == 0, out.stderr
     assert "OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation: deadlines, drain-on-close, pin-leak guard
+# ---------------------------------------------------------------------------
+
+from repro.durability import FatalFaultInjected, FaultRule, faults  # noqa: E402
+from repro.serving import DeadlineExceeded, ServiceClosed  # noqa: E402
+
+
+def test_scheduler_close_drains_queued_and_coalesced():
+    """No follower future is ever left unresolved by close()."""
+    sched = CoalescingScheduler(max_workers=1, max_queue=8)
+    gate = threading.Event()
+    f_lead = sched.submit("slow", lambda: (gate.wait(10), "done")[1])
+    followers = [sched.submit("slow", lambda: "x") for _ in range(4)]
+    assert all(f is f_lead for f in followers)   # K waiters, one future
+    f_queued = sched.submit("other", lambda: "never-runs")
+
+    closer = threading.Thread(target=lambda: sched.close(wait=True))
+    closer.start()
+    _wait_until(lambda: sched.stats()["closed"])
+    gate.set()                                    # let the in-flight finish
+    closer.join(10)
+    assert not closer.is_alive()
+
+    assert f_lead.result(5) == "done"             # in-flight completed
+    with pytest.raises(ServiceClosed):            # queued failed fast
+        f_queued.result(5)
+    with pytest.raises(ServiceClosed):            # post-close submit
+        sched.submit("new", lambda: 1)
+    st = sched.stats()
+    assert st["pending"] == 0 and st["inflight"] == 0
+    assert st["drained"] == 1
+
+
+def test_scheduler_deadline_admission_and_queue_expiry():
+    sched = CoalescingScheduler(max_workers=1, max_queue=8)
+    gate = threading.Event()
+    sched.submit("slow", lambda: gate.wait(10))
+
+    # admission: estimated queue wait already exceeds the budget
+    sched._ewma_s = 5.0
+    with pytest.raises(DeadlineExceeded) as err:
+        sched.submit("fast", lambda: 1, deadline_s=0.001)
+    assert err.value.stage == "admission" and err.value.retry_after > 0
+
+    # queue expiry: admitted optimistically, but the worker frees too late
+    sched._ewma_s = 0.0001
+    fut = sched.submit("fast2", lambda: 2, deadline_s=0.05)
+    _time.sleep(0.12)
+    gate.set()
+    with pytest.raises(DeadlineExceeded) as err2:
+        fut.result(10)
+    assert err2.value.stage == "queue"
+    st = sched.stats()
+    assert st["expired"] == 1 and st["rejected"] >= 1
+    assert st["pending"] == 0 and st["inflight"] == 0
+    sched.close()
+
+
+def test_service_close_resolves_every_coalesced_waiter():
+    """Satellite regression: K coalesced waiters at close — all resolve."""
+    svc = _service(max_workers=1)
+    gate = _gate_engine_extract(svc)
+    lead, meta = svc.submit_extract("social")
+    waiters = [svc.submit_extract("social")[0] for _ in range(4)]
+    assert all(w is lead for w in waiters)
+    queued, _ = svc.submit_analyze("social", algorithm="degree_stats")
+    assert queued is not lead
+
+    closer = threading.Thread(target=svc.close)
+    closer.start()
+    _wait_until(lambda: svc._scheduler.stats()["closed"])
+    gate.set()
+    closer.join(15)
+    assert not closer.is_alive()
+
+    payload = lead.result(5)                      # leader + followers: data
+    assert payload["kind"] == "extract"
+    with pytest.raises(ServiceClosed):            # queued-but-unstarted
+        queued.result(5)
+    with pytest.raises(ServiceClosed):            # terminal for new work
+        svc.analyze("social", algorithm="pagerank", iterations=2)
+    # every pin released, every quota slot returned
+    assert svc._store.pinned_epochs() == []
+    _wait_until(lambda: svc._quotas.stats()["public"]["inflight"] == 0)
+
+
+def test_snapshot_pins_balance_on_every_failure_path():
+    """Satellite regression: pins drain on worker faults and deadlines."""
+    svc = _service(max_workers=1)
+    store = svc._store
+    assert "pinned_epochs" in store.stats()
+
+    with store.pin() as snap:                     # live pin is visible
+        assert store.pinned_epochs() == [snap.epoch]
+    assert store.pinned_epochs() == []
+
+    # failure path 1: the worker raises mid-request
+    with faults.inject(FaultRule(site="scheduler.worker",
+                                 action="raise_fatal", times=1)):
+        with pytest.raises(FatalFaultInjected):
+            svc.extract("social", timeout=30)
+    assert store.pinned_epochs() == []
+
+    # failure path 2: an admitted request expires in the queue
+    gate = _gate_engine_extract(svc)
+    lead, _ = svc.submit_extract("social")
+    svc._scheduler._ewma_s = 0.0001    # optimistic estimate: admit it
+    expired, _ = svc.submit_analyze("social", algorithm="degree_stats",
+                                    deadline_s=0.02)
+    _time.sleep(0.08)
+    gate.set()
+    with pytest.raises(DeadlineExceeded):
+        expired.result(10)
+    lead.result(10)
+    _wait_until(lambda: store.pinned_epochs() == [])
+    _wait_until(lambda: svc._quotas.stats()["public"]["inflight"] == 0)
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# HTTP error hygiene: every non-2xx body is {error, retryable, trace_id}
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def http_server_tight():
+    """max_workers=1 / max_queue=2: backpressure is easy to provoke."""
+    sys.path.insert(0, "examples")
+    try:
+        from serve_graphs import make_server
+    finally:
+        sys.path.pop(0)
+    svc = _service(max_workers=1, max_queue=2)
+    server = make_server(svc, port=0)
+    thread = threading.Thread(target=server.serve_forever, daemon=True)
+    thread.start()
+    host, port = server.server_address[:2]
+    try:
+        yield _Http(f"http://{host}:{port}", svc)
+    finally:
+        faults.uninstall()
+        server.shutdown()
+        server.server_close()
+        svc.close()
+        thread.join(10)
+
+
+def _assert_error_shape(body, retryable, with_retry_after=False):
+    assert {"error", "retryable", "trace_id"} <= set(body)
+    assert body["retryable"] is retryable
+    assert isinstance(body["trace_id"], str) and body["trace_id"]
+    if with_retry_after:
+        assert body["retry_after"] > 0
+
+
+def test_http_error_bodies_are_structured(http_server_tight):
+    url = http_server_tight.url
+    svc = http_server_tight.service
+
+    # quota exhausted -> 429, retryable, Retry-After
+    svc._quotas.set_quota("throttled", TenantQuota(max_inflight=0))
+    status, body = _http(f"{url}/v1/extract", {"model": "social"},
+                         headers={"X-Tenant": "throttled"})
+    assert status == 429
+    _assert_error_shape(body, True, with_retry_after=True)
+
+    # retired/unpublished epoch -> 410, not retryable
+    status, body = _http(f"{url}/v1/extract",
+                         {"model": "social", "epoch": 999})
+    assert status == 410
+    _assert_error_shape(body, False)
+    assert body["available"] == [0]
+
+    # unknown model -> 404; bad request -> 400
+    status, body = _http(f"{url}/v1/extract", {"model": "nope"})
+    assert status == 404
+    _assert_error_shape(body, False)
+    status, body = _http(f"{url}/v1/extract", {})
+    assert status == 400
+    _assert_error_shape(body, False)
+
+    # occupy the single worker so queue-level errors are reachable
+    gate = _gate_engine_extract(svc)
+    results = {}
+
+    def held(name, path, payload):
+        results[name] = _http(f"{url}{path}", payload)
+
+    leader = threading.Thread(target=held, args=(
+        "leader", "/v1/extract", {"model": "social"}))
+    leader.start()
+    _wait_until(lambda: svc._scheduler.stats()["pending"] == 1)
+
+    # blown deadline at admission -> 504, retryable
+    status, body = _http(f"{url}/v1/extract",
+                         {"model": "social", "method": "gqfast",
+                          "deadline_s": 0.0001})
+    assert status == 504
+    _assert_error_shape(body, True, with_retry_after=True)
+    assert body["stage"] == "admission"
+
+    # fill the queue, then overflow -> 429, retryable, Retry-After
+    waiter = threading.Thread(target=held, args=(
+        "waiter", "/v1/analyze",
+        {"model": "social", "algorithm": "degree_stats"}))
+    waiter.start()
+    _wait_until(lambda: svc._scheduler.stats()["pending"] == 2)
+    status, body = _http(f"{url}/v1/analyze",
+                         {"model": "social", "algorithm": "pagerank"})
+    assert status == 429
+    _assert_error_shape(body, True, with_retry_after=True)
+
+    gate.set()
+    leader.join(30)
+    waiter.join(30)
+    assert results["leader"][0] == 200 and results["waiter"][0] == 200
+
+    # injected fatal worker fault -> 500, not retryable
+    with faults.inject(FaultRule(site="scheduler.worker",
+                                 action="raise_fatal", times=1)):
+        status, body = _http(f"{url}/v1/analyze",
+                             {"model": "social", "algorithm": "pagerank",
+                              "params": {"iterations": 3}})
+    assert status == 500
+    _assert_error_shape(body, False)
+
+    # injected transient worker fault -> 503, retryable
+    with faults.inject(FaultRule(site="scheduler.worker",
+                                 action="raise", times=1)):
+        status, body = _http(f"{url}/v1/extract",
+                             {"model": "social", "method": "gqfast"})
+    assert status == 503
+    _assert_error_shape(body, True)
+
+    # the service is not wedged by any of the above
+    status, body = _http(f"{url}/v1/extract", {"model": "social"})
+    assert status == 200
+    assert svc._store.pinned_epochs() == []
