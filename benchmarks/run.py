@@ -4,6 +4,7 @@
 #   python -m benchmarks.run --all           # CSV + every BENCH_*.json artifact
 #   python -m benchmarks.run --only engine_warm_vs_cold,graph_analytics
 #   python -m benchmarks.run --smoke         # CI mode: tiny SF, artifact checks
+#   python -m benchmarks.run --sweep --check # perf-trajectory grid + gate
 import argparse
 import json
 import math
@@ -75,6 +76,18 @@ BREAKDOWN_KEYS = ("wall_s", "compile_s", "execute_s", "transfer_s",
                   "coverage")
 
 
+def _check_breakdown(path: str, field: str, breakdown) -> None:
+    if not isinstance(breakdown, dict):
+        raise SystemExit(
+            f"smoke: {path} field {field!r} is not a breakdown dict: "
+            f"{breakdown!r}")
+    for key in BREAKDOWN_KEYS:
+        value = breakdown.get(key)
+        if not isinstance(value, (int, float)) or not math.isfinite(value):
+            raise SystemExit(
+                f"smoke: {path} {field}[{key!r}] not finite: {value!r}")
+
+
 def _check_artifact(name: str, path: str) -> None:
     with open(path) as f:
         data = json.load(f)
@@ -89,15 +102,15 @@ def _check_artifact(name: str, path: str) -> None:
             if not isinstance(value, (int, float)) or not math.isfinite(value):
                 raise SystemExit(
                     f"smoke: {path} field {field!r} not finite: {value!r}")
-        breakdown = record.get("breakdown")
-        if not isinstance(breakdown, dict):
+        if "breakdown" not in record:
             raise SystemExit(
                 f"smoke: {path} record misses 'breakdown': {record}")
-        for key in BREAKDOWN_KEYS:
-            value = breakdown.get(key)
-            if not isinstance(value, (int, float)) or not math.isfinite(value):
-                raise SystemExit(
-                    f"smoke: {path} breakdown[{key!r}] not finite: {value!r}")
+        # every breakdown variant a module emits (cold `breakdown`,
+        # `breakdown_warm`, `breakdown_second`, ...) gets the same
+        # finite-keys check — warm-path attribution can't silently rot
+        for field in sorted(record):
+            if field.startswith("breakdown"):
+                _check_breakdown(path, field, record[field])
     print(f"# smoke: {path} OK ({len(data)} records)", file=sys.stderr)
 
 
@@ -117,7 +130,37 @@ def main(argv=None) -> None:
         help="CI mode: run the artifact-emitting modules at SF=1 with one "
              "repeat, write their BENCH_*.json artifacts, and fail unless "
              "each parses with its expected speedup fields")
+    parser.add_argument(
+        "--sweep", action="store_true",
+        help="run the SF x churn x concurrency perf-trajectory sweep and "
+             "write BENCH_trajectory.json (one record per grid cell)")
+    parser.add_argument(
+        "--check", action="store_true",
+        help="gate the trajectory against benchmarks/trajectory_baseline"
+             ".json; with --sweep checks the fresh records, alone it "
+             "re-checks an existing BENCH_trajectory.json")
     args = parser.parse_args(argv)
+
+    if args.sweep or args.check:
+        from benchmarks import trajectory
+
+        if args.sweep:
+            records = trajectory.run_sweep()
+        else:
+            with open(trajectory.JSON_PATH) as f:
+                records = json.load(f)
+        if args.check:
+            failures = trajectory.check(records)
+            if failures:
+                for failure in failures:
+                    print(f"# trajectory REGRESSION: {failure}",
+                          file=sys.stderr)
+                raise SystemExit(
+                    f"trajectory check failed: {len(failures)} regressions "
+                    f"vs {trajectory.BASELINE_PATH}")
+            print(f"# trajectory: check OK ({len(records)} cells vs "
+                  f"{trajectory.BASELINE_PATH})", file=sys.stderr)
+        return
 
     if args.smoke:
         os.environ["REPRO_BENCH_SF"] = "1"

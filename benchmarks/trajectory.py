@@ -1,0 +1,243 @@
+"""Perf-trajectory sweep: SF × churn × concurrency, gated against a baseline.
+
+The ROADMAP scale-up item made every `BENCH_*.json` number a *claim*;
+this module turns the claims into a monitored trajectory.  One sweep runs
+the serving stack end to end — cold extract, churn + incremental refresh,
+and a concurrent request hammer — over the full SF × churn × concurrency
+grid and emits ``BENCH_trajectory.json``: one record per grid cell, each
+embedding the tracer ``breakdown`` of its dominant phase.
+
+Regression gating (``python -m benchmarks.run --sweep --check``) compares
+**dimensionless intra-run ratios** against the committed
+``benchmarks/trajectory_baseline.json``:
+
+* ``warm_speedup``        = cold extract / warm extract
+* ``refresh_speedup``     = cold extract / incremental refresh (churn > 0)
+* ``throughput_scaling``  = rps at concurrency c / rps at c = 1
+
+Both sides of every ratio are measured in the same process on the same
+machine, so absolute machine speed cancels to first order — the committed
+baseline transfers between a developer laptop and a CI runner.  Noise is
+handled twice over: each cell is best-of-``REPRO_SWEEP_REPEATS`` rounds,
+and the gate only fails a metric below ``baseline * (1 - REPRO_SWEEP_TOL)``
+(default tolerance 0.75 — wide enough for scheduler jitter on a 2-core CI
+runner, tight enough to catch the order-of-magnitude regressions the
+ratios are protecting: losing the plan/executable caches, the delta path
+falling back to full extracts, coalescing breaking).
+
+Grid overrides (comma-separated)::
+
+    REPRO_SWEEP_SF=1,3 REPRO_SWEEP_CHURNS=0,0.01,0.1 \
+    REPRO_SWEEP_CONCURRENCY=1,4 REPRO_SWEEP_REPEATS=2 \
+    PYTHONPATH=src python -m benchmarks.run --sweep --check
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+import threading
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro import obs
+from repro.data import fraud_model, make_tpcds
+from repro.serving import GraphService, TenantQuota
+
+JSON_PATH = os.environ.get("REPRO_BENCH_TRAJECTORY_JSON",
+                           "BENCH_trajectory.json")
+BASELINE_PATH = os.path.join(os.path.dirname(__file__),
+                             "trajectory_baseline.json")
+
+SFS = [int(s) for s in
+       os.environ.get("REPRO_SWEEP_SF", "1").split(",")]
+CHURNS = [float(c) for c in
+          os.environ.get("REPRO_SWEEP_CHURNS", "0,0.01,0.1").split(",")]
+CONCURRENCY = [int(c) for c in
+               os.environ.get("REPRO_SWEEP_CONCURRENCY", "1,4").split(",")]
+REPEATS = int(os.environ.get("REPRO_SWEEP_REPEATS", "2"))
+REL_TOL = float(os.environ.get("REPRO_SWEEP_TOL", "0.75"))
+PER_CLIENT = int(os.environ.get("REPRO_SWEEP_PER_CLIENT", "6"))
+
+MODEL_NAME = "fraud_store"
+FACT = "store_sales"
+
+#: the ratio metrics the --check gate enforces per grid cell
+CHECK_METRICS = ("warm_speedup", "refresh_speedup", "throughput_scaling")
+
+
+def _log(msg: str) -> None:
+    print(f"# trajectory: {msg}", file=sys.stderr, flush=True)
+
+
+def _churn(svc: GraphService, rng: np.random.Generator, frac: float) -> int:
+    """Insert + delete ~frac of the fact table through the CDC API."""
+    db = svc._db
+    rows = db.stats[FACT].rows
+    k = max(1, int(rows * frac / 2))
+    base = int(np.asarray(db.tables[FACT]["rid"]).max()) + 1
+    svc.mutate(FACT, insert={
+        "rid": np.arange(base, base + k, dtype=np.int32),
+        "c_sk": rng.integers(0, db.stats["customer"].rows,
+                             k).astype(np.int32),
+        "i_sk": rng.integers(0, db.stats["item"].rows, k).astype(np.int32),
+        "p_sk": rng.integers(0, db.stats["promotion"].rows,
+                             k).astype(np.int32),
+        "o_sk": rng.integers(0, 4, k).astype(np.int32)})
+    live = np.flatnonzero(np.asarray(db.tables[FACT].valid))
+    take = min(k, live.size)
+    mask = np.zeros(db.tables[FACT].capacity, dtype=bool)
+    mask[rng.choice(live, take, replace=False)] = True
+    svc.mutate(FACT, delete_mask=mask)
+    return k + take
+
+
+def _extract_s(svc: GraphService, tenant: str = "sweep") -> float:
+    t0 = time.perf_counter()
+    svc.extract(MODEL_NAME, tenant=tenant, timeout=900)
+    return time.perf_counter() - t0
+
+
+def _hammer(svc: GraphService, concurrency: int, per_client: int):
+    """rps + latency percentiles for `concurrency` synchronous clients."""
+    latencies: List[float] = []
+    errors: List[BaseException] = []
+
+    def client(i: int) -> None:
+        for _ in range(per_client):
+            t0 = time.perf_counter()
+            try:
+                svc.extract(MODEL_NAME, tenant=f"sweep-c{i}", timeout=900)
+            except BaseException as e:        # surfaced after join
+                errors.append(e)
+                return
+            latencies.append(time.perf_counter() - t0)
+
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(concurrency)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+    lat_ms = np.asarray(latencies) * 1e3
+    return (len(latencies) / wall, float(np.percentile(lat_ms, 50)),
+            float(np.percentile(lat_ms, 99)))
+
+
+def run_sweep() -> List[Dict[str, object]]:
+    """The full SF × churn × concurrency grid; writes ``JSON_PATH``."""
+    from repro.core.pipeline import drain_reoptimizations
+
+    records: List[Dict[str, object]] = []
+    for sf in SFS:
+        _log(f"SF={sf}: building database + service")
+        db = make_tpcds(sf=sf, seed=0)
+        svc = GraphService(
+            db, {MODEL_NAME: fraud_model("store")},
+            max_workers=max(max(CONCURRENCY), 2), max_queue=256,
+            # tenant response caches off: the hammer must measure the
+            # engine's warm path + coalescing, not a dict lookup
+            default_quota=TenantQuota(max_inflight=64, max_entries=0))
+        rng = np.random.default_rng(0)
+        try:
+            _, cold_bd = obs.traced_call("trajectory.cold", _extract_s, svc)
+            cold_s = cold_bd["wall_s"]
+            drain_reoptimizations()
+            warm_s = min(_extract_s(svc) for _ in range(max(2, REPEATS)))
+            _log(f"SF={sf}: cold {cold_s:.2f}s warm {warm_s * 1e3:.1f}ms "
+                 f"({cold_s / warm_s:.0f}x)")
+            for churn in CHURNS:
+                refresh_s, refresh_bd, refresh_path = None, None, "noop"
+                for _ in range(REPEATS):
+                    if churn > 0:
+                        _churn(svc, rng, churn)
+                    out, bd = obs.traced_call("trajectory.refresh",
+                                              svc.refresh)
+                    if refresh_s is None or out["build_s"] < refresh_s:
+                        refresh_s, refresh_bd = out["build_s"], bd
+                        refresh_path = (out.get("models") or {}).get(
+                            MODEL_NAME, out["path"])
+                base_rps: Optional[float] = None
+                for conc in CONCURRENCY:
+                    rps, p50_ms, p99_ms = _hammer(svc, conc, PER_CLIENT)
+                    if base_rps is None:
+                        base_rps = rps   # CONCURRENCY[0] is the scaling base
+                    records.append({
+                        "sf": sf, "churn": churn, "concurrency": conc,
+                        "cold_extract_s": round(cold_s, 4),
+                        "warm_extract_s": round(warm_s, 5),
+                        "refresh_s": round(refresh_s, 4),
+                        "refresh_path": refresh_path,
+                        "rps": round(rps, 2),
+                        "p50_ms": round(p50_ms, 3),
+                        "p99_ms": round(p99_ms, 3),
+                        "warm_speedup": round(cold_s / max(warm_s, 1e-9), 2),
+                        "refresh_speedup": (
+                            round(cold_s / max(refresh_s, 1e-9), 2)
+                            if churn > 0 and refresh_s else None),
+                        "throughput_scaling": round(
+                            rps / max(base_rps, 1e-9), 3),
+                        "breakdown": refresh_bd if churn > 0 else cold_bd,
+                    })
+                    _log(f"SF={sf} churn={churn} c={conc}: "
+                         f"rps={rps:.1f} p50={p50_ms:.1f}ms "
+                         f"refresh={refresh_path}")
+        finally:
+            svc.close()
+    with open(JSON_PATH, "w") as f:
+        json.dump(records, f, indent=1, sort_keys=True)
+    _log(f"{len(records)} grid cells "
+         f"({len(SFS)} SF x {len(CHURNS)} churn x "
+         f"{len(CONCURRENCY)} concurrency) -> {JSON_PATH}")
+    return records
+
+
+def check(records: List[Dict[str, object]],
+          baseline_path: str = BASELINE_PATH,
+          rel_tol: float = REL_TOL) -> List[str]:
+    """Regression failures of ``records`` vs. the committed baseline.
+
+    Fails a cell when a ratio metric drops below ``baseline * (1 -
+    rel_tol)``, when a baseline grid cell is missing entirely, or when a
+    record lost its embedded tracer breakdown.  Returns human-readable
+    failure strings (empty = gate passes).
+    """
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+
+    def grid(rs):
+        return {(r["sf"], r["churn"], r["concurrency"]): r for r in rs}
+
+    got, want = grid(records), grid(baseline)
+    failures: List[str] = []
+    missing = sorted(set(want) - set(got))
+    if missing:
+        failures.append(f"missing grid cells: {missing}")
+    for cell in sorted(want):
+        rec = got.get(cell)
+        if rec is None:
+            continue
+        if not isinstance(rec.get("breakdown"), dict):
+            failures.append(f"{cell}: record lost its tracer breakdown")
+        for metric in CHECK_METRICS:
+            base = want[cell].get(metric)
+            if not isinstance(base, (int, float)):
+                continue           # e.g. refresh_speedup is None at churn=0
+            val = rec.get(metric)
+            if not isinstance(val, (int, float)) or not math.isfinite(val):
+                failures.append(
+                    f"{cell}: {metric} missing or not finite ({val!r})")
+                continue
+            floor = base * (1.0 - rel_tol)
+            if val < floor:
+                failures.append(
+                    f"{cell}: {metric} regressed: {val:.2f} < floor "
+                    f"{floor:.2f} (baseline {base:.2f}, tol {rel_tol:.0%})")
+    return failures

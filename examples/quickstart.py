@@ -83,7 +83,20 @@ def main(sf: int = 2):
     print(f"   edges={sizes}")
     print(f"   warm speedup: {r1.timings.total_s / r2.timings.total_s:.2f}x")
 
-    print("\n== 6. analytics without leaving the session ==")
+    print("\n== 6. why that plan? EXPLAIN / EXPLAIN ANALYZE ==")
+    # explain() is free — it reports the plan (join orders, MV-vs-OJ
+    # decision with cost numbers, pow-2 capacities, executable state)
+    # without running anything; explain_analyze() adds actual rows and
+    # capacity utilization per join step, recycled from the overflow
+    # check's existing host sync — zero extra device round trips
+    report = engine.explain_analyze(model)
+    print("\n".join("   " + line
+                    for line in report.render_text().splitlines()))
+    print(f"   sharing speedup per cost model: "
+          f"{report.sharing_speedup:.2f}x  "
+          "(POST /v1/explain on a live server)")
+
+    print("\n== 7. analytics without leaving the session ==")
     csr = r2.graph_view()
     print(f"   vertices={csr.num_vertices}  edge_counts={csr.edge_counts}")
     pr = engine.analyze(model, algorithm="pagerank", label="Buy", iters=15)
@@ -100,7 +113,7 @@ def main(sf: int = 2):
     n_comp = len(np.unique(np.asarray(wcc.values)))
     print(f"   weakly connected components: {n_comp}")
 
-    print("\n== 7. the database mutates; refresh() propagates the deltas ==")
+    print("\n== 8. the database mutates; refresh() propagates the deltas ==")
     rng = np.random.default_rng(42)
     k = max(8, 4 * sf)
     base = int(np.asarray(db.tables["store_sales"]["rid"]).max()) + 1
@@ -132,7 +145,7 @@ def main(sf: int = 2):
                        np.asarray(pr_cold.values), rtol=1e-5, atol=1e-7)
     print(f"   refreshed analyze matches cold engine: {same}")
 
-    print("\n== 8. no model at all? discover one from the raw tables ==")
+    print("\n== 9. no model at all? discover one from the raw tables ==")
     disc = engine.discover()
     print(f"   {disc.stats['accepted_fks']} FKs inferred, validated by "
           f"{disc.stats['containment_checks']} sampled containment checks "
@@ -151,7 +164,7 @@ def main(sf: int = 2):
     print(f"   degree_stats over the discovered graph: "
           f"{ {k: round(float(np.asarray(v).mean()), 2) for k, v in pr_disc.values.items()} }")
 
-    print("\n== 9. where did the time go? ask the tracer ==")
+    print("\n== 10. where did the time go? ask the tracer ==")
     from repro import obs
     _, bd = obs.traced_call("quickstart.extract", engine.extract, model)
     print(f"   warm extract: wall {bd['wall_s'] * 1e3:.1f}ms = "
@@ -171,7 +184,7 @@ def main(sf: int = 2):
           "(full registry: obs.REGISTRY.snapshot(), or GET /v1/metrics "
           "on a live server)")
 
-    print("\n== 10. durability: crash, recover, bit-identical graphs ==")
+    print("\n== 11. durability: crash, recover, bit-identical graphs ==")
     import shutil
     import tempfile
 

@@ -13,9 +13,14 @@ Endpoints (tenant comes from the ``X-Tenant`` header, default "public"):
                                       ?format=prometheus for text format)
     GET  /v1/trace/<id>               one request's span tree + summary
                                       (?format=chrome for Perfetto /
-                                      chrome://tracing events)
+                                      chrome://tracing events, served as
+                                      an application/json attachment)
+    GET  /v1/traces                   recent trace digests: id, root span
+                                      + category, wall time (?limit=N)
     GET  /v1/models                   registered model names
     POST /v1/extract    {"model": name | spec, "method"?, "epoch"?}
+    POST /v1/explain    {"model": name | spec, "method"?, "analyze"?,
+                         "epoch"?}  EXPLAIN (ANALYZE) plan report
     POST /v1/analyze    {"model": name, "algorithm"?, "params"?, "epoch"?}
     POST /v1/discover   {"tables"?: [...], "sample"?, "use_name_hints"?,
                          "accept_threshold"?, "top"?, "epoch"?}
@@ -150,8 +155,8 @@ class GraphRequestHandler(BaseHTTPRequestHandler):
     def do_GET(self) -> None:
         svc = self.server.service
         path, _, query = self.path.partition("?")
-        fmt = dict(p.partition("=")[::2] for p in query.split("&")
-                   if p).get("format", "json")
+        params = dict(p.partition("=")[::2] for p in query.split("&") if p)
+        fmt = params.get("format", "json")
         if path == "/healthz":
             # 200 with a status field even when degraded: the process is
             # alive and serving epoch E; "degraded" carries the cause
@@ -163,14 +168,32 @@ class GraphRequestHandler(BaseHTTPRequestHandler):
                 self._send_text(200, obs.REGISTRY.to_prometheus())
             else:
                 self._send(200, obs.REGISTRY.snapshot())
+        elif path == "/v1/traces":
+            try:
+                limit = int(params.get("limit", 50))
+            except ValueError:
+                limit = 50
+            self._send(200, {"traces": obs.TRACER.list_traces(limit=limit)})
         elif path.startswith("/v1/trace/"):
             tid = path[len("/v1/trace/"):]
             spans = obs.TRACER.get(tid)
             if spans is None:
                 self._send_error(404, f"no trace {tid!r}", False,
-                                 available=obs.TRACER.trace_ids()[-20:])
+                                 available=obs.TRACER.trace_ids()[-20:],
+                                 list="/v1/traces")
             elif fmt == "chrome":
-                self._send(200, obs.TRACER.chrome(tid))
+                # explicit type + attachment disposition: the export is a
+                # file meant for chrome://tracing / Perfetto, not a browser
+                # page (tid is a known trace id, so it is filename-safe)
+                raw = json.dumps(obs.TRACER.chrome(tid)).encode()
+                self.send_response(200)
+                self.send_header("Content-Type",
+                                 "application/json; charset=utf-8")
+                self.send_header("Content-Disposition",
+                                 f'attachment; filename="trace-{tid}.json"')
+                self.send_header("Content-Length", str(len(raw)))
+                self.end_headers()
+                self.wfile.write(raw)
             else:
                 self._send(200, {"trace_id": tid, "spans": spans,
                                  "summary": obs.TRACER.summary(tid)})
@@ -192,6 +215,15 @@ class GraphRequestHandler(BaseHTTPRequestHandler):
             if self.path == "/v1/extract":
                 out = svc.extract(req["model"],
                                   method=req.get("method", "extgraph"),
+                                  tenant=self.tenant,
+                                  epoch=req.get("epoch"),
+                                  request_id=self.trace_id,
+                                  deadline_s=deadline_s)
+                self._send(200, out)
+            elif self.path == "/v1/explain":
+                out = svc.explain(req["model"],
+                                  method=req.get("method", "extgraph"),
+                                  analyze=bool(req.get("analyze", False)),
                                   tenant=self.tenant,
                                   epoch=req.get("epoch"),
                                   request_id=self.trace_id,

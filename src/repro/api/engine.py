@@ -179,6 +179,28 @@ class AnalyticsResult:
     timings: AnalyticsTimings
 
 
+def _step_labels(kind: str, unit, orders) -> List[str]:
+    """Human labels for a program's capacity buckets, in consumption order.
+
+    Mirrors the capacity layout of ``build_query_program`` /
+    ``build_merged_program``: the (shared) chain's join steps first, then —
+    for merged units — each branch's inner chain (only when it has more
+    than one relation) followed by its one outer-join attachment.
+    Indicator-only branches contribute no buckets.
+    """
+    labels = [f"join {alias}" for alias in orders[0][1:]]
+    if kind != "merged":
+        return labels
+    for bi, b in enumerate(unit.branches):
+        if not b.relations:
+            continue
+        if len(b.relations) > 1:
+            labels.extend(f"branch[{b.id}] join {alias}"
+                          for alias in orders[1 + bi][1:])
+        labels.append(f"outer-join {b.id}")
+    return labels
+
+
 class _LRUCache:
     """Access-ordered LRU map with hit/miss/eviction counters.
 
@@ -186,15 +208,28 @@ class _LRUCache:
     the key to the MRU end, so an entry kept hot by lookups survives
     pressure from a stream of cold inserts.  Not internally locked — the
     owning engine serializes access under its request lock.
+
+    When a ``sizer`` is provided, every entry's device-resident byte size
+    (shape × dtype metadata, never a transfer) is tracked in ``bytes``
+    and mirrored to the ``engine_cache_bytes{cache}`` gauge; an optional
+    ``max_bytes`` budget evicts LRU-first until under budget — but always
+    keeps at least one entry, so a single value larger than the whole
+    budget is still cached rather than thrashing forever.
     """
 
-    def __init__(self, capacity: int, name: Optional[str] = None):
+    def __init__(self, capacity: int, name: Optional[str] = None,
+                 sizer=None, max_bytes: Optional[int] = None):
         self.capacity = int(capacity)
         self.name = name
+        self.sizer = sizer
+        self.max_bytes = None if max_bytes is None else int(max_bytes)
         self._data: "collections.OrderedDict" = collections.OrderedDict()
+        self._sizes: Dict = {}
+        self.bytes = 0
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.byte_evictions = 0
 
     def _event(self, event: str, amount: int = 1) -> None:
         """Per-instance counters stay exact for :meth:`info` (forked
@@ -206,6 +241,46 @@ class _LRUCache:
                 "engine_cache_events_total",
                 help="Engine LRU cache hits/misses/evictions by cache.",
                 cache=self.name, event=event).inc(amount)
+
+    def _entry_size(self, value) -> int:
+        if self.sizer is None:
+            return 0
+        try:
+            return int(self.sizer(value))
+        except Exception:
+            return 0
+
+    def _set_bytes_gauge(self) -> None:
+        # last-writer-wins across forked engines sharing a cache name:
+        # the serving layer samples the gauge from whichever epoch's
+        # engine touched its cache most recently, which is the live one
+        if self.name is not None and self.sizer is not None:
+            obs.REGISTRY.gauge(
+                "engine_cache_bytes",
+                help="Resident device bytes per engine cache "
+                     "(sized from buffer shape x dtype).",
+                cache=self.name).set(float(self.bytes))
+
+    def _account(self, key, value) -> None:
+        old = self._sizes.pop(key, 0)
+        size = self._entry_size(value)
+        self._sizes[key] = size
+        self.bytes += size - old
+
+    def _evict_lru(self, byte_budget: bool = False) -> None:
+        key, _ = self._data.popitem(last=False)
+        self.bytes -= self._sizes.pop(key, 0)
+        self._event("evictions")
+        if byte_budget:
+            self.byte_evictions += 1
+
+    def _enforce_budgets(self) -> None:
+        while len(self._data) > self.capacity:
+            self._evict_lru()
+        if self.max_bytes is not None:
+            while self.bytes > self.max_bytes and len(self._data) > 1:
+                self._evict_lru(byte_budget=True)
+        self._set_bytes_gauge()
 
     def __len__(self) -> int:
         return len(self._data)
@@ -228,12 +303,16 @@ class _LRUCache:
     def put(self, key, value) -> None:
         self._data[key] = value
         self._data.move_to_end(key)
-        while len(self._data) > self.capacity:
-            self._data.popitem(last=False)
-            self._event("evictions")
+        self._account(key, value)
+        self._enforce_budgets()
 
     def pop(self, key, default=None):
-        return self._data.pop(key, default)
+        if key in self._data:
+            self.bytes -= self._sizes.pop(key, 0)
+            value = self._data.pop(key)
+            self._set_bytes_gauge()
+            return value
+        return default
 
     def items(self):
         return self._data.items()
@@ -246,19 +325,33 @@ class _LRUCache:
 
     def clear(self) -> None:
         self._data.clear()
+        self._sizes.clear()
+        self.bytes = 0
+        self._set_bytes_gauge()
 
     def seed(self, other: "_LRUCache") -> None:
         """Adopt ``other``'s entries (shared immutable values, private
         recency book) — the engine-fork primitive MVCC snapshots use."""
         self._data.update(other._data)
-        while len(self._data) > self.capacity:
-            self._data.popitem(last=False)
-            self._event("evictions")
+        for key in other._data:
+            old = self._sizes.pop(key, 0)
+            size = other._sizes.get(key)
+            if size is None:
+                size = self._entry_size(other._data[key])
+            self._sizes[key] = size
+            self.bytes += size - old
+        self._enforce_budgets()
 
     def info(self) -> Dict[str, int]:
-        return {"size": len(self._data), "capacity": self.capacity,
-                "hits": self.hits, "misses": self.misses,
-                "evictions": self.evictions}
+        out = {"size": len(self._data), "capacity": self.capacity,
+               "hits": self.hits, "misses": self.misses,
+               "evictions": self.evictions}
+        if self.sizer is not None:    # unsized caches report no byte fields
+            out["bytes"] = self.bytes
+            out["byte_evictions"] = self.byte_evictions
+            if self.max_bytes is not None:
+                out["max_bytes"] = self.max_bytes
+        return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -340,7 +433,8 @@ class ExtractionEngine:
                  auto_refresh: bool = False,
                  refresh_threshold: float = 0.1,
                  max_results: int = 16,
-                 persistent_cache: Optional[str] = None):
+                 persistent_cache: Optional[str] = None,
+                 cache_byte_budgets: Optional[Dict[str, int]] = None):
         # opt-in on-disk XLA cache: an explicit path, or (when None) the
         # REPRO_COMPILATION_CACHE env var; absent both this is a no-op
         from repro.core.pipeline import enable_persistent_compilation_cache
@@ -362,13 +456,24 @@ class ExtractionEngine:
         # reader-vs-reader on one epoch — never reader-vs-writer (the next
         # epoch is built on a fork; see :meth:`fork`)
         self._lock = threading.RLock()
-        self._plans: "_LRUCache" = _LRUCache(max_plans, name="plans")
-        self._views: "_LRUCache" = _LRUCache(max_views, name="views")
+        # every named cache accounts its device-resident bytes via
+        # obs.entry_nbytes (shape x dtype metadata — no transfers); an
+        # optional per-cache byte budget ({"results": 64 << 20, ...})
+        # turns the accounting into LRU byte-pressure eviction
+        budgets = dict(cache_byte_budgets or {})
+        self.cache_byte_budgets = budgets
+
+        def _cache(capacity: int, name: str) -> "_LRUCache":
+            return _LRUCache(capacity, name=name, sizer=obs.entry_nbytes,
+                             max_bytes=budgets.get(name))
+
+        self._plans: "_LRUCache" = _cache(max_plans, "plans")
+        self._views: "_LRUCache" = _cache(max_views, "views")
         # CSR conversions, content-addressed by graph fingerprint
-        self._csrs: "_LRUCache" = _LRUCache(max_csrs, name="csrs")
+        self._csrs: "_LRUCache" = _cache(max_csrs, "csrs")
         # last materialized result per (model signature, method) — what
         # refresh() propagates deltas into
-        self._results: "_LRUCache" = _LRUCache(max_results, name="results")
+        self._results: "_LRUCache" = _cache(max_results, "results")
         # schema discovery state: per-table column profiles keyed by stats
         # fingerprint (survive unrelated churn), and whole discovery
         # results keyed by (tables, their fingerprints, knobs)
@@ -412,9 +517,14 @@ class ExtractionEngine:
         are this engine's compiler's counters (hits mean a unit ran without
         re-tracing or re-compiling).  ``epoch`` is the database changelog
         epoch this engine currently serves.  ``caches`` breaks each LRU
-        down into size/capacity/hits/misses/evictions and ``requests``
-        counts executed work per public path — the one structure the
-        serving stats endpoint and benchmarks read.
+        down into size/capacity/hits/misses/evictions/bytes and
+        ``requests`` counts executed work per public path — the one
+        structure the serving stats endpoint and benchmarks read.
+        ``cache_bytes`` totals each cache's device-resident bytes (from
+        buffer shape × dtype metadata — computing it never transfers),
+        and ``device_memory`` samples the runtime allocator's
+        live/peak/limit watermarks where the backend reports them
+        (TPU/GPU; ``{}`` on CPU).
         """
         with self._lock:
             cstats = self.compiler.cache_info()
@@ -431,6 +541,11 @@ class ExtractionEngine:
                                "results": self._results.info(),
                                "profiles": self._profiles.info(),
                                "discoveries": self._discoveries.info()},
+                    "cache_bytes": {"plans": self._plans.bytes,
+                                    "views": self._views.bytes,
+                                    "csrs": self._csrs.bytes,
+                                    "results": self._results.bytes},
+                    "device_memory": obs.device_memory_stats(),
                     "requests": dict(self.request_stats)}
 
     def fork(self, db: Database) -> "ExtractionEngine":
@@ -452,7 +567,8 @@ class ExtractionEngine:
                 max_csrs=self.max_csrs, compiler=self.compiler,
                 compiled=self.compiled, auto_refresh=self.auto_refresh,
                 refresh_threshold=self.refresh_threshold,
-                max_results=self.max_results)
+                max_results=self.max_results,
+                cache_byte_budgets=self.cache_byte_budgets)
             clone._plans.seed(self._plans)
             clone._views.seed(self._views)
             clone._csrs.seed(self._csrs)
@@ -660,6 +776,170 @@ class ExtractionEngine:
         return ExtractionResult(graph=graph, timings=timings,
                                 provenance=provenance, plan=plan,
                                 model=model, _engine=self)
+
+    # -- plan introspection: EXPLAIN / EXPLAIN ANALYZE -----------------------
+    def explain(self, model: GraphModel, method: str = "extgraph",
+                analyze: bool = False) -> "obs.PlanReport":
+        """Why this plan?  A structured :class:`repro.obs.PlanReport`.
+
+        Plain ``explain`` runs *only* the planning block of a request —
+        stale-view eviction, plan-cache lookup/validation, Algorithm 2 on
+        a miss — and never executes a join, never compiles, never touches
+        the device.  The produced plan is cached, so EXPLAIN-then-extract
+        is a plan-cache hit.  Per plan unit the report carries the chosen
+        join order, the MV-reuse vs. outer-join decision with the
+        cost-model numbers behind it (chosen plan vs. the no-sharing
+        baseline), the pow-2 capacity buckets with their provenance
+        (proven by a prior run vs. freshly estimated), and the
+        executable-cache state.
+
+        ``analyze=True`` (or :meth:`explain_analyze`) first runs the full
+        extract through the normal hot path, then reads back the per-step
+        *actual* row counts the pipeline's overflow check already synced
+        to the host — reporting estimated-vs-actual rows and capacity
+        utilization with **zero added device syncs**.
+        """
+        if method not in PLANNED_METHODS:
+            raise ValueError(
+                f"explain() supports planned methods only, not {method!r}")
+        with self._lock:
+            self._count_request("explains")
+            with obs.span("engine.explain", model=model.name, method=method,
+                          analyze=bool(analyze)):
+                result = None
+                if analyze:
+                    result = self._extract_full(model, method)
+                self._evict_stale_views()
+                rdb = self._request_db()
+                key = self._plan_key(model, method)
+                if result is not None and result.plan is not None:
+                    plan = result.plan
+                    hit = result.provenance.plan_cache_hit
+                else:
+                    plan = self._plans.get(key, count=False)
+                    hit = plan is not None and all(
+                        v.pattern.signature in self._views
+                        for v in plan.reused)
+                    if not hit:
+                        cached = [ViewDef(cv.name, cv.pattern)
+                                  for cv in self._views.values()]
+                        plan = plan_queries(rdb, model.queries(), method,
+                                            cached_views=cached)
+                        # cache it: EXPLAIN-then-extract hits the plan cache
+                        self._plans.put(key, plan)
+                timings = None
+                if result is not None:
+                    timings = {"plan": result.timings.plan_s,
+                               "extract": result.timings.extract_s}
+                return self._build_report(model, method, rdb, plan, hit,
+                                          analyzed=bool(analyze),
+                                          timings=timings)
+
+    def explain_analyze(self, model: GraphModel,
+                        method: str = "extgraph") -> "obs.PlanReport":
+        """EXPLAIN with execution — estimated vs. actual rows per step.
+
+        Runs the full extract (the normal hot path, including its one
+        overflow-check host sync per unit attempt), then attaches the
+        host-side actual row counts and capacity utilization.  The
+        reporting itself performs no device work.
+        """
+        return self.explain(model, method=method, analyze=True)
+
+    def _build_report(self, model: GraphModel, method: str, rdb: Database,
+                      plan: ExtractionPlan, plan_cache_hit: bool, *,
+                      analyzed: bool,
+                      timings: Optional[Dict[str, float]]) -> "obs.PlanReport":
+        from repro.core.cost import estimate_query, view_cost
+        from repro.core.jsoj import estimate_merged
+        from repro.core.planner import PlanUnit, _plan_db, plan_cost
+
+        # cost numbers behind the MV/OJ decision: the chosen hybrid plan
+        # vs. the no-sharing baseline (every edge query its own unit).
+        # _plan_db registers estimated stats for not-yet-materialized
+        # views, so cold EXPLAIN can size programs without executing.
+        pdb = _plan_db(rdb, tuple(plan.reused) + tuple(plan.views))
+        baseline = ExtractionPlan(
+            views=(), units=tuple(PlanUnit(single=q)
+                                  for q in model.queries()))
+        cost_baseline = float(plan_cost(rdb, baseline))
+        cost_plan = float(plan_cost(rdb, plan))
+
+        reused_views = tuple(
+            {"name": v.name,
+             "tables": sorted({r.table for r in v.pattern.relations}),
+             "rows_est": float(pdb.stats[v.name].rows)}
+            for v in plan.reused)
+        views = tuple(
+            self._unit_report(
+                pdb, rdb, "query", v.as_query(), name=v.name,
+                report_kind="view", analyzed=analyzed,
+                est_cost=float(view_cost(estimate_query(pdb, v.as_query()))))
+            for v in plan.views)
+        units = []
+        for u in plan.units:
+            if u.is_single:
+                units.append(self._unit_report(
+                    pdb, rdb, "edges", u.single, name=u.single.name,
+                    report_kind="edges", analyzed=analyzed,
+                    est_cost=float(estimate_query(pdb, u.single).cost)))
+            else:
+                units.append(self._unit_report(
+                    pdb, rdb, "merged", u.group,
+                    name="+".join(u.group.member_names()),
+                    report_kind="merged", analyzed=analyzed,
+                    est_cost=float(estimate_merged(pdb, u.group)[0]),
+                    members=u.group.member_names()))
+        return obs.PlanReport(
+            model=model.name, method=method, epoch=int(self.db.epoch),
+            analyzed=analyzed, plan_cache_hit=bool(plan_cache_hit),
+            cost_plan=cost_plan, cost_baseline=cost_baseline,
+            views=views, reused_views=reused_views, units=tuple(units),
+            timings_s=dict(timings or {}))
+
+    def _unit_report(self, pdb: Database, rdb: Database, kind: str, unit, *,
+                     name: str, report_kind: str, analyzed: bool,
+                     est_cost: float, members=()) -> "obs.UnitReport":
+        """One unit's report: program peek + executable probe + actuals.
+
+        ``pdb`` (stats-only shadow with estimated view stats) feeds the
+        read-only program resolution; ``rdb`` (real tables incl. cached
+        views) feeds the executable-cache probe.  With ``analyzed``, the
+        per-step actual rows come from the compiler's host-side retention
+        — no device work anywhere in here.
+        """
+        if self.compiled:
+            prog, source = self.compiler.peek_program(pdb, kind, unit)
+            state = self.compiler.executable_state(prog, rdb.tables)
+            record = (self.compiler.last_rows(prog.signature)
+                      if analyzed else None)
+        else:
+            from repro.core.pipeline import (build_merged_program,
+                                             build_query_program)
+            if kind == "merged":
+                prog = build_merged_program(pdb, unit)
+            else:
+                prog = build_query_program(pdb, unit,
+                                           edges=(kind == "edges"))
+            source, state, record = "estimated", "eager", None
+        actual = record["actual"] if record else None
+        labels = _step_labels(kind, unit, prog.orders)
+        steps = tuple(
+            obs.StepReport(
+                label=labels[i] if i < len(labels) else f"step {i + 1}",
+                capacity=int(cap),
+                est_rows=(float(prog.est_rows[i])
+                          if i < len(prog.est_rows) else 0.0),
+                actual_rows=(int(actual[i])
+                             if actual is not None and i < len(actual)
+                             else None))
+            for i, cap in enumerate(prog.capacities))
+        return obs.UnitReport(
+            name=name, kind=report_kind, inputs=tuple(prog.inputs),
+            join_orders=tuple(tuple(o) for o in prog.orders),
+            capacities=tuple(int(c) for c in prog.capacities),
+            est_cost=float(est_cost), executable=state,
+            capacity_source=source, steps=steps, members=tuple(members))
 
     # -- incremental maintenance ---------------------------------------------
     def _merged_deltas(self, tables, epoch: int, memo: Optional[Dict] = None

@@ -594,6 +594,12 @@ class PipelineCompiler:
         # outgrows them, and updates this memo too.
         self._unit_memo: "collections.OrderedDict" = collections.OrderedDict()
         self.max_unit_memo = 512
+        # last observed per-step actual rows, by program signature: the
+        # host-side values the overflow check already synced.  EXPLAIN
+        # ANALYZE reads them back, so reporting estimated-vs-actual rows
+        # adds zero device round-trips to the hot path.
+        self._last_rows: "collections.OrderedDict" = collections.OrderedDict()
+        self.max_last_rows = 512
         self.stats = {"hits": 0, "misses": 0, "retries": 0,
                       "compiled": 0, "compile_s": 0.0,
                       "tiered": 0, "reoptimized": 0}
@@ -709,8 +715,7 @@ class PipelineCompiler:
                           capacities=list(prog.capacities), tiered=tiered)
         return exe
 
-    @staticmethod
-    def _observe_rows(prog: UnitProgram, caps: Tuple[int, ...],
+    def _observe_rows(self, prog: UnitProgram, caps: Tuple[int, ...],
                       need: np.ndarray) -> None:
         """Predicted-vs-actual row accounting (host-known values only).
 
@@ -718,7 +723,8 @@ class PipelineCompiler:
         device round-trips.  The estimate ratio is (actual+1)/(predicted+1)
         — log₂ buckets make under- and over-estimates symmetric around 1 —
         and utilization is actual/capacity (1.0 = a bucket about to
-        overflow).
+        overflow).  The per-step values are also retained by program
+        signature for :meth:`last_rows` (EXPLAIN ANALYZE).
         """
         if need.size == 0:
             return
@@ -730,12 +736,79 @@ class PipelineCompiler:
             "pipeline_capacity_utilization",
             help="Actual rows / planned capacity per join step.",
             kind=prog.kind)
-        actual = need.tolist()
+        actual = [int(n) for n in need.tolist()]
         for i, n in enumerate(actual):
             if i < len(prog.est_rows):
                 ratio_h.observe((n + 1.0) / (prog.est_rows[i] + 1.0))
             if i < len(caps) and caps[i] > 0:
                 util_h.observe(n / caps[i])
+        with self._lock:
+            self._last_rows[prog.signature] = {
+                "actual": actual,
+                "capacities": [int(c) for c in caps],
+                "est_rows": [float(r) for r in prog.est_rows],
+            }
+            self._last_rows.move_to_end(prog.signature)
+            while len(self._last_rows) > self.max_last_rows:
+                self._last_rows.popitem(last=False)
+
+    def last_rows(self, signature) -> Optional[Dict[str, list]]:
+        """Per-step ``{actual, capacities, est_rows}`` from the most recent
+        run of the program with this signature, or ``None`` if it never ran
+        (or aged out of the bounded retention window).  Pure host memory —
+        reading it performs no device work."""
+        with self._lock:
+            rec = self._last_rows.get(signature)
+            return None if rec is None else {k: list(v)
+                                             for k, v in rec.items()}
+
+    def peek_program(self, db: Database, kind: str, unit):
+        """The program a unit *would* run with — read-only introspection.
+
+        Resolution mirrors :meth:`_program` (stats-keyed programs first,
+        then the stats-independent memo with its proven capacities), but a
+        miss builds a fresh cost-model program WITHOUT entering it into
+        either cache: EXPLAIN over estimated view stats must not pin
+        estimate-derived capacities into the memo the execution path will
+        later trust.  Returns ``(program, source)`` with source one of
+        ``"programs"`` | ``"memo"`` | ``"estimated"``.
+        """
+        inputs = (_merged_inputs(unit) if kind == "merged"
+                  else _query_inputs(unit))
+        pkey = (kind, unit, self._stats_fp(db, inputs))
+        with self._lock:
+            prog = self._programs.get(pkey)
+            if prog is not None:
+                return prog, "programs"
+            prog = self._unit_memo.get((kind, unit))
+            if prog is not None:
+                return prog, "memo"
+        if kind == "merged":
+            prog = build_merged_program(db, unit, self.margin,
+                                        self.initial_capacity_clamp)
+        else:
+            prog = build_query_program(db, unit, edges=(kind == "edges"),
+                                       margin=self.margin,
+                                       clamp=self.initial_capacity_clamp)
+        return prog, "estimated"
+
+    def executable_state(self, prog: UnitProgram,
+                         tables: Dict[str, Table]) -> str:
+        """Would running this program compile or just launch?
+
+        ``"cached"`` — an executable for the exact (signature, orders,
+        capacities, kernel flags, schema) key is resident; ``"uncompiled"``
+        — it would compile on first run; ``"unknown"`` — an input (an
+        unmaterialized view) is missing from ``tables``, so the schema part
+        of the key cannot be formed without executing.
+        """
+        if any(n not in tables for n in prog.inputs):
+            return "unknown"
+        inputs = {n: tables[n] for n in prog.inputs}
+        key = (prog.signature, prog.orders, prog.capacities,
+               self.use_kernel, self.use_bloom, _schema_fp(inputs))
+        with _CACHE_LOCK:
+            return "cached" if key in _EXECUTABLE_CACHE else "uncompiled"
 
     def _run(self, db: Database, pkey, prog: UnitProgram):
         """Execute with overflow-retry; remembers proven capacities.

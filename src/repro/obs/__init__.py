@@ -21,6 +21,19 @@ Usage::
 
 See README "Observability" for the span taxonomy and metric names.
 """
+from repro.obs.explain import (  # noqa: F401
+    PlanReport,
+    StepReport,
+    UnitReport,
+)
+from repro.obs.memory import (  # noqa: F401
+    array_nbytes,
+    csr_nbytes,
+    device_memory_stats,
+    entry_nbytes,
+    graph_nbytes,
+    table_nbytes,
+)
 from repro.obs.metrics import (  # noqa: F401
     Counter,
     FAILURE_FAMILIES,
@@ -47,6 +60,9 @@ __all__ = [
     "FAILURE_FAMILIES", "failure_counter", "get_registry", "CATEGORIES",
     "TRACER", "Tracer", "new_trace_id", "sanitize_trace_id", "set_enabled",
     "span", "span_tree_shape", "traced_call",
+    "PlanReport", "UnitReport", "StepReport",
+    "array_nbytes", "table_nbytes", "graph_nbytes", "csr_nbytes",
+    "entry_nbytes", "device_memory_stats",
 ]
 
 

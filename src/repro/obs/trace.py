@@ -208,6 +208,32 @@ class Tracer:
             entry = self._traces.get(trace_id)
             return None if entry is None else list(entry["spans"])
 
+    def list_traces(self, limit: int = 50) -> List[Dict]:
+        """Newest-last digest of recent traces (``GET /v1/traces``).
+
+        One entry per retained trace: id, root span name + category,
+        root wall time, span count, dropped count.  A trace whose root
+        span has not closed yet reports ``root=""`` / ``wall_s=0.0`` —
+        listing must never block on in-flight requests.
+        """
+        limit = max(1, int(limit))
+        with self._lock:
+            items = [(tid, list(entry["spans"]), entry["dropped"])
+                     for tid, entry in list(self._traces.items())[-limit:]]
+        out: List[Dict] = []
+        for tid, spans, dropped in items:
+            root = min((s for s in spans if not s["parent"]),
+                       key=lambda s: s["start_s"], default=None)
+            out.append({
+                "trace_id": tid,
+                "root": root["name"] if root else "",
+                "category": (root["category"] or "other") if root else "",
+                "wall_s": root["dur_s"] if root else 0.0,
+                "spans": len(spans),
+                "dropped": dropped,
+            })
+        return out
+
     def dropped(self, trace_id: str) -> int:
         with self._lock:
             entry = self._traces.get(trace_id)

@@ -512,6 +512,39 @@ class GraphService:
                                       kind="analyze", request_id=request_id,
                                       deadline_s=deadline_s)
 
+    def submit_explain(self, model: ModelRef, method: str = "extgraph",
+                       analyze: bool = False,
+                       tenant: str = DEFAULT_TENANT,
+                       epoch: Optional[int] = None,
+                       request_id: Optional[str] = None,
+                       deadline_s: Optional[float] = None
+                       ) -> Tuple[Future, Dict[str, object]]:
+        """Schedule EXPLAIN (optionally ANALYZE); returns ``(future, meta)``.
+
+        Plain EXPLAIN only plans (no join execution, no device work) but
+        still runs through admission/coalescing so concurrent identical
+        asks share one report per epoch; ANALYZE executes the full
+        extract through the engine's hot path first, and the report's
+        actual-row columns come from host-side values the pipeline had
+        already synced — zero added device round-trips.
+        """
+        name, m = self._resolve_model(model)
+        key = ("explain", name, model_signature(m), method, bool(analyze))
+
+        def work(snap: Snapshot) -> Dict[str, object]:
+            report = snap.engine.explain(m, method=method,
+                                         analyze=bool(analyze))
+            return {
+                "kind": "explain", "model": name, "method": method,
+                "analyze": bool(analyze), "epoch": snap.epoch,
+                "report": report.to_json(),
+                "text": report.render_text(),
+            }
+
+        return self._admit_and_submit(tenant, key, epoch, work,
+                                      kind="explain", request_id=request_id,
+                                      deadline_s=deadline_s)
+
     def submit_discover(self, tables: Optional[list] = None, *,
                         sample: int = 512, use_name_hints: bool = True,
                         accept_threshold: float = 0.5,
@@ -588,6 +621,19 @@ class GraphService:
                                         epoch=epoch, request_id=request_id,
                                         deadline_s=deadline_s,
                                         **params)
+        return {**fut.result(timeout), **meta}
+
+    def explain(self, model: ModelRef, method: str = "extgraph",
+                analyze: bool = False, tenant: str = DEFAULT_TENANT,
+                epoch: Optional[int] = None,
+                timeout: Optional[float] = None,
+                request_id: Optional[str] = None,
+                deadline_s: Optional[float] = None) -> Dict[str, object]:
+        """Blocking :meth:`submit_explain`; merges per-request meta in."""
+        fut, meta = self.submit_explain(model, method=method,
+                                        analyze=analyze, tenant=tenant,
+                                        epoch=epoch, request_id=request_id,
+                                        deadline_s=deadline_s)
         return {**fut.result(timeout), **meta}
 
     def discover(self, tables: Optional[list] = None, *,

@@ -274,3 +274,106 @@ def test_served_trace_coverage_and_http_roundtrip(dblp):
     finally:
         server.shutdown()
         svc.close()
+
+
+# -- concurrent observability reads ------------------------------------------
+
+def test_observability_reads_consistent_under_load(dblp):
+    """Readers hammer /v1/metrics (both formats) and stats()/cache_info()
+    while extract, mutate, and refresh requests run: no exceptions, no torn
+    snapshots (every family renders with its full shape), and the request
+    counters stay exact — one increment per submitted extract."""
+    import pathlib
+    import sys
+    import urllib.error
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                           / "examples"))
+    try:
+        from serve_graphs import make_server
+    finally:
+        sys.path.pop(0)
+    import numpy as np
+    from repro.serving import GraphService
+    db, model = dblp
+    svc = GraphService(db.snapshot(), {"dblp": model}, max_workers=4)
+    server = make_server(svc)
+    host, port = server.server_address[:2]
+    threading.Thread(target=server.serve_forever, daemon=True).start()
+    base = f"http://{host}:{port}"
+
+    def our_requests():
+        fam = obs.REGISTRY.snapshot().get("serving_requests_total")
+        if not fam:
+            return 0.0
+        return sum(s["value"] for s in fam["series"]
+                   if s["labels"].get("kind") == "extract"
+                   and s["labels"].get("tenant", "").startswith("obsload-"))
+
+    before = our_requests()
+    stop = threading.Event()
+    errors = []
+
+    def reader():
+        while not stop.is_set():
+            try:
+                with urllib.request.urlopen(base + "/v1/metrics") as r:
+                    snap = json.loads(r.read())
+                for fam in snap.values():     # untorn: full family shape
+                    assert {"type", "help", "series"} <= set(fam)
+                    for series in fam["series"]:
+                        assert "labels" in series
+                with urllib.request.urlopen(
+                        base + "/v1/metrics?format=prometheus") as r:
+                    for line in r.read().decode().splitlines():
+                        if line and not line.startswith("#"):
+                            float(line.rpartition(" ")[2])
+                stats = svc.stats()
+                info = stats["engine"]
+                assert {"caches", "cache_bytes", "requests"} <= set(info)
+                assert set(info["cache_bytes"]) == {"plans", "views",
+                                                    "csrs", "results"}
+            except Exception as e:            # pragma: no cover - fail path
+                errors.append(e)
+                return
+
+    N_EXTRACTORS, PER = 3, 6
+
+    def extractor(i):
+        try:
+            for _ in range(PER):
+                svc.extract("dblp", tenant=f"obsload-{i}", timeout=300)
+        except Exception as e:
+            errors.append(e)
+
+    def churner():
+        try:
+            rng = np.random.default_rng(7)
+            for round_no in range(3):
+                base_rid = 10_000_000 + round_no * 100
+                svc.mutate("wrote", insert={
+                    "rid": np.arange(base_rid, base_rid + 50,
+                                     dtype=np.int32),
+                    "a_sk": rng.integers(0, 100, 50).astype(np.int32),
+                    "p_sk": rng.integers(0, 100, 50).astype(np.int32)})
+                svc.refresh()
+        except Exception as e:
+            errors.append(e)
+
+    readers = [threading.Thread(target=reader) for _ in range(2)]
+    writers = ([threading.Thread(target=extractor, args=(i,))
+                for i in range(N_EXTRACTORS)]
+               + [threading.Thread(target=churner)])
+    try:
+        for t in readers + writers:
+            t.start()
+        for t in writers:
+            t.join()
+        stop.set()
+        for t in readers:
+            t.join()
+        assert not errors, errors
+        assert our_requests() - before == N_EXTRACTORS * PER
+    finally:
+        stop.set()
+        server.shutdown()
+        svc.close()

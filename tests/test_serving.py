@@ -190,7 +190,8 @@ def test_cache_info_shape():
     for cache in ("plans", "views", "csrs", "results"):
         sub = info["caches"][cache]
         assert set(sub) == {"size", "capacity", "hits", "misses",
-                            "evictions"}
+                            "evictions", "bytes", "byte_evictions"}
+        assert sub["bytes"] == info["cache_bytes"][cache]
     assert info["requests"]["extracts"] == 1
     assert info["requests"]["full_extracts"] == 1
 
